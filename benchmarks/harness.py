@@ -1,0 +1,54 @@
+"""Shared benchmark harness: time-per-leapfrog-step and time-per-effective-
+sample, the paper's two metrics (Table 2a, Fig 2b)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+from jax import random
+
+from repro.core.infer import MCMC, NUTS, effective_sample_size
+
+
+def run_nuts(model, model_args=(), model_kwargs=None, *, num_warmup,
+             num_samples, rng_seed=0, step_size=None, adapt=True,
+             max_tree_depth=10):
+    kw = model_kwargs or {}
+    kernel_kwargs = dict(max_tree_depth=max_tree_depth)
+    if step_size is not None:
+        kernel_kwargs.update(step_size=step_size, adapt_step_size=adapt,
+                             adapt_mass_matrix=adapt)
+    kernel = NUTS(model, **kernel_kwargs)
+    mcmc = MCMC(kernel, num_warmup=num_warmup, num_samples=num_samples)
+
+    t0 = time.time()
+    mcmc.run(random.PRNGKey(rng_seed), *model_args, **kw)
+    jax.block_until_ready(mcmc.get_samples())
+    cold = time.time() - t0
+    # warm run: the whole chain is ONE cached XLA program (paper Sec 3.1) —
+    # re-running with a new seed measures pure device time, no trace/compile
+    t1 = time.time()
+    mcmc.run(random.PRNGKey(rng_seed + 1), *model_args, **kw)
+    jax.block_until_ready(mcmc.get_samples())
+    wall = time.time() - t1
+
+    extras = mcmc.get_extra_fields()
+    n_leapfrog = int(np.sum(np.asarray(extras["num_steps"])))
+    # warmup leapfrogs aren't collected; estimate with the sampling mean
+    mean_steps = n_leapfrog / max(num_samples, 1)
+    total_lf = n_leapfrog + mean_steps * num_warmup
+    samples = mcmc.get_samples(group_by_chain=True)
+    ess = {k: float(np.min(effective_sample_size(v)))
+           for k, v in samples.items() if v.ndim >= 2}
+    min_ess = min(ess.values()) if ess else float("nan")
+    return {
+        "wall_s": wall,
+        "compile_s": cold - wall,
+        "num_leapfrog": int(total_lf),
+        "ms_per_leapfrog": 1e3 * wall / max(total_lf, 1),
+        "min_ess": min_ess,
+        "ms_per_eff_sample": 1e3 * wall / max(min_ess, 1e-9),
+        "mean_accept": float(np.mean(np.asarray(extras["accept_prob"]))),
+        "divergences": int(np.sum(np.asarray(extras["diverging"]))),
+    }

@@ -1,0 +1,90 @@
+"""Roofline aggregation: read the dry-run JSON records and emit the
+EXPERIMENTS.md §Roofline table (single-pod baselines per the assignment)."""
+import glob
+import json
+import os
+import sys
+
+
+def load(results_dir="benchmarks/results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("variants"):   # §Perf variant runs: not baselines
+            continue
+        if "skipped" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": r["skipped"]})
+            continue
+        if "error" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "error": r["error"]})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "memory_s_flashproj": r.get("memory_s_flashproj",
+                                        r["memory_s"]),
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "model_flops": r["model_flops_global"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+            "bytes_per_device_GB":
+                (r.get("argument_size_in_bytes") or 0) / 1e9,
+            "temp_GB": (r.get("temp_size_in_bytes") or 0) / 1e9,
+        })
+    return rows
+
+
+def markdown(rows):
+    hdr = ("| arch | shape | compute s | memory s | mem s (flash-proj) | "
+           "collective s | dominant | useful | roofline frac | args GB/dev "
+           "| temps GB/dev |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skip | — | — | — | — |")
+            continue
+        ur = (f"{r['useful_ratio']:.2f}" if r["useful_ratio"] is not None
+              else "—")
+        rf = (f"{r['roofline_fraction']:.3f}"
+              if r["roofline_fraction"] is not None else "—")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['memory_s_flashproj']:.3g} | "
+            f"{r['collective_s']:.3g} | "
+            f"{r['dominant']} | {ur} | "
+            f"{rf} | {r['bytes_per_device_GB']:.2f} "
+            f"| {r['temp_GB']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else
+                "benchmarks/results/dryrun")
+    rows = table(recs)
+    print(markdown(rows))
+    ok = [r for r in rows if "skipped" not in r and "error" not in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["collective_s"] /
+                   max(r["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} {worst['shape']} "
+              f"({worst['roofline_fraction']:.4f})")
+        print(f"most collective-bound: {coll['arch']} {coll['shape']} "
+              f"(coll/comp = "
+              f"{coll['collective_s']/max(coll['compute_s'],1e-12):.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Run every benchmark (one per paper table/figure) + the roofline table.
+
+``python -m benchmarks.run``          — full paper-spec settings
+``python -m benchmarks.run --quick``  — reduced step counts (CI / smoke)
+"""
+import json
+import os
+import sys
+import time
+
+RESULTS = "benchmarks/results"
+
+
+def main():
+    quick = "--quick" in sys.argv or os.environ.get("BENCH_QUICK") == "1"
+    os.makedirs(RESULTS, exist_ok=True)
+    t0 = time.time()
+    out = {}
+
+    from benchmarks import hmm, logreg, skim
+    print("=" * 70)
+    print("Table 2a — HMM (time per leapfrog step)")
+    print("=" * 70, flush=True)
+    out["hmm"] = hmm.main(quick=quick)
+
+    print("=" * 70)
+    print("Table 2a — logistic regression / CoverType-shaped")
+    print("=" * 70, flush=True)
+    out["logreg"] = logreg.main(quick=quick)
+
+    print("=" * 70)
+    print("Fig 2b — SKIM time per effective sample vs p")
+    print("=" * 70, flush=True)
+    out["skim"] = skim.main(quick=quick)
+
+    print("=" * 70)
+    print("Roofline (from dry-run artifacts; see EXPERIMENTS.md)")
+    print("=" * 70, flush=True)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+        out["roofline_rows"] = roofline.table(roofline.load())
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"[roofline skipped: {e}]")
+
+    out["total_wall_s"] = time.time() - t0
+    with open(os.path.join(RESULTS, "bench_summary.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nall benchmarks done in {out['total_wall_s']:.0f}s; summary in "
+          f"{RESULTS}/bench_summary.json")
+
+
+if __name__ == "__main__":
+    main()

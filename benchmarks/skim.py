@@ -1,0 +1,33 @@
+"""Paper Fig 2b (SKIM): time per effective sample vs dimensionality p.
+
+Paper sweeps p for Stan vs NumPyro with 1000+1000 steps; the claim is
+consistently lower overhead for NumPyro's end-to-end-compiled NUTS as p
+grows.  We sweep a reduced p-grid sized to this 1-core container and report
+ms/effective-sample per p.
+"""
+import json
+import sys
+
+from benchmarks.harness import run_nuts
+from benchmarks.models import skim_data, skim_model
+
+
+def main(quick=False):
+    ps = [32, 64] if quick else [32, 64, 128, 256]
+    num = 100 if quick else 400
+    recs = []
+    for p in ps:
+        data = skim_data(p)
+        out = run_nuts(skim_model, (data["x"],), {"y": data["y"]},
+                       num_warmup=num, num_samples=num, max_tree_depth=8)
+        recs.append({"p": p, **out})
+        print(f"[skim] p={p}: {out['ms_per_eff_sample']:.2f} ms/eff-sample "
+              f"({out['min_ess']:.0f} ESS, {out['divergences']} div)",
+              flush=True)
+    rec = {"benchmark": "skim_fig2b", "sweep": recs}
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,34 @@
+"""Vectorized multi-chain NUTS on the paper's HMM benchmark model, with
+cross-chain diagnostics and chain checkpointing — the Sec 3.2 claim
+("running MCMC chains ... batched with vmap") as a runnable script.
+
+    PYTHONPATH=src python examples/multichain_hmm.py
+"""
+import time
+
+from jax import random
+
+from benchmarks.models import hmm_data, hmm_model
+from repro.core.infer import MCMC, NUTS, print_summary
+from repro.distributed import checkpoint as ckpt
+
+
+def main():
+    data = hmm_data(T=200, T_sup=50)
+    mcmc = MCMC(NUTS(hmm_model), num_warmup=200, num_samples=200,
+                num_chains=4, chain_method="vectorized")
+    t0 = time.time()
+    mcmc.run(random.PRNGKey(0), data)
+    print(f"4 vectorized chains in {time.time()-t0:.1f}s "
+          f"(one XLA program, chains batched by vmap)")
+    print_summary(mcmc.get_samples(group_by_chain=True))
+
+    # fault tolerance: persist all chain states; a preempted worker restores
+    ckpt.save(mcmc.last_state, "/tmp/repro_hmm_chains", step=200)
+    restored, step, _ = ckpt.restore(mcmc.last_state,
+                                     "/tmp/repro_hmm_chains")
+    print(f"chain state checkpoint round-trip ok at step {step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""mamba2-370m [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]  48L d_model=1024 d_ff=0 vocab=50280
+ssm_state=128.  All shapes run (O(1)-in-seq state); long_500k exercises the
+sub-quadratic path the assignment requires."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    max_seq=1048576,
+)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: composable effect handlers + iterative
+# NUTS on a JAX functional core. Handlers live in handlers.py, primitives in
+# primitives.py, distributions in dist/, inference in infer/.
+from . import dist, handlers
+from .primitives import deterministic, param, plate, sample
+
+__all__ = ["dist", "handlers", "sample", "param", "deterministic", "plate"]

@@ -1,0 +1,235 @@
+"""Effect handlers (Table 1 of the paper, plus the standard extended set).
+
+A handler is a context manager that sits on the global stack and rewrites
+messages produced by the primitives.  Because handlers execute in the Python
+runtime during tracing, they are invisible to JAX and compose with ``jit``,
+``grad``, ``vmap``, ``pjit`` and ``shard_map``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import primitives
+from .primitives import apply_stack, stack
+
+
+class Messenger:
+    def __init__(self, fn: Optional[Callable] = None):
+        self.fn = fn
+
+    def __enter__(self):
+        stack().append(self)
+        return self
+
+    def __exit__(self, exc_type, exc_value, tb):
+        if exc_type is None:
+            assert stack()[-1] is self
+            stack().pop()
+        else:  # unwind robustly on exceptions raised mid-trace
+            if self in stack():
+                while stack() and stack()[-1] is not self:
+                    stack().pop()
+                stack().pop()
+        return False
+
+    def process_message(self, msg: dict) -> None:  # innermost -> outermost
+        pass
+
+    def postprocess_message(self, msg: dict) -> None:  # outermost -> innermost
+        pass
+
+    def __call__(self, *args, **kwargs):
+        if self.fn is None:
+            raise ValueError("handler has no wrapped function to call")
+        with self:
+            return self.fn(*args, **kwargs)
+
+
+class trace(Messenger):
+    """Record every primitive site into an :class:`OrderedDict`."""
+
+    def __enter__(self):
+        super().__enter__()
+        self._trace = OrderedDict()
+        return self._trace
+
+    def postprocess_message(self, msg: dict) -> None:
+        name = msg["name"]
+        if msg["type"] in ("sample", "param", "deterministic"):
+            if name in self._trace:
+                raise ValueError(f"duplicate site name '{name}' in trace")
+            self._trace[name] = msg.copy()
+
+    def get_trace(self, *args, **kwargs) -> OrderedDict:
+        self(*args, **kwargs)
+        return self._trace
+
+
+class replay(Messenger):
+    """Replay sample statements against values recorded in ``guide_trace``."""
+
+    def __init__(self, fn=None, guide_trace: Optional[dict] = None):
+        super().__init__(fn)
+        if guide_trace is None:
+            raise ValueError("replay requires a guide_trace")
+        self.guide_trace = guide_trace
+
+    def process_message(self, msg: dict) -> None:
+        name = msg["name"]
+        if msg["type"] == "sample" and name in self.guide_trace:
+            guide_msg = self.guide_trace[name]
+            if guide_msg["type"] != "sample" or guide_msg["is_observed"]:
+                raise RuntimeError(f"site {name} must be a latent sample in the guide")
+            msg["value"] = guide_msg["value"]
+
+
+class seed(Messenger):
+    """Seed ``fn`` with a PRNGKey; every interior ``sample`` splits it.
+
+    This abstracts JAX's functional PRNG away from model code (Sec. 2).
+    """
+
+    def __init__(self, fn=None, rng_seed=None):
+        super().__init__(fn)
+        if isinstance(rng_seed, int):
+            rng_seed = jax.random.PRNGKey(rng_seed)
+        if rng_seed is None:
+            raise ValueError("seed requires an rng key or int seed")
+        self.rng_key = rng_seed
+
+    def process_message(self, msg: dict) -> None:
+        if (
+            msg["type"] == "sample"
+            and not msg["is_observed"]
+            and msg["kwargs"].get("rng_key") is None
+        ) or (msg["type"] == "param" and msg["kwargs"].get("rng_key") is None
+              and msg["value"] is None):
+            self.rng_key, subkey = jax.random.split(self.rng_key)
+            msg["kwargs"]["rng_key"] = subkey
+            if msg["type"] == "param" and msg["kwargs"].get("shape") is not None:
+                init_fn = msg["kwargs"].get("init_fn") or _default_param_init
+                shape = msg["kwargs"]["shape"]
+                dtype = msg["kwargs"].get("dtype", jnp.float32)
+                key = subkey
+                msg["fn"] = lambda *a, **kw: init_fn(key, shape, dtype)
+
+
+def _default_param_init(key, shape, dtype):
+    if len(shape) == 0:
+        return jnp.zeros(shape, dtype)
+    fan_in = shape[-1] if len(shape) == 1 else shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+class substitute(Messenger):
+    """Substitute values for ``sample``/``param`` sites.
+
+    Unlike :class:`condition`, substituted sample sites stay *unobserved* —
+    they contribute to the joint density as latents (used by inference to
+    evaluate the density at a proposed point).
+    """
+
+    def __init__(self, fn=None, data: Optional[Dict] = None,
+                 substitute_fn: Optional[Callable] = None):
+        super().__init__(fn)
+        if (data is None) == (substitute_fn is None):
+            raise ValueError("substitute requires exactly one of data / substitute_fn")
+        self.data = data
+        self.substitute_fn = substitute_fn
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] not in ("sample", "param"):
+            return
+        if self.data is not None:
+            value = self.data.get(msg["name"])
+        else:
+            value = self.substitute_fn(msg)
+        if value is not None:
+            msg["value"] = value
+
+
+class condition(Messenger):
+    """Condition unobserved sample sites on the given values (Table 1)."""
+
+    def __init__(self, fn=None, data: Optional[Dict] = None):
+        super().__init__(fn)
+        self.data = data or {}
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] == "sample" and msg["name"] in self.data:
+            msg["value"] = self.data[msg["name"]]
+            msg["is_observed"] = True
+
+
+class block(Messenger):
+    """Hide selected sites from outer handlers."""
+
+    def __init__(self, fn=None, hide_fn: Optional[Callable] = None,
+                 hide: Optional[list] = None, expose: Optional[list] = None):
+        super().__init__(fn)
+        if hide_fn is not None:
+            self.hide_fn = hide_fn
+        elif hide is not None:
+            self.hide_fn = lambda msg: msg["name"] in hide
+        elif expose is not None:
+            self.hide_fn = lambda msg: msg["name"] not in expose
+        else:
+            self.hide_fn = lambda msg: True
+
+    def process_message(self, msg: dict) -> None:
+        if self.hide_fn(msg):
+            msg["stop"] = True
+
+
+class mask(Messenger):
+    """Mask out (boolean) parts of a site's log density."""
+
+    def __init__(self, fn=None, mask=None):
+        super().__init__(fn)
+        self.mask = mask
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] != "sample":
+            return
+        msg["mask"] = self.mask if msg["mask"] is None else msg["mask"] & self.mask
+
+
+class scale(Messenger):
+    """Rescale the log density of enclosed sites (e.g. data subsampling)."""
+
+    def __init__(self, fn=None, scale=1.0):
+        super().__init__(fn)
+        self.scale_factor = scale
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] != "sample":
+            return
+        msg["scale"] = (
+            self.scale_factor if msg["scale"] is None
+            else self.scale_factor * msg["scale"]
+        )
+
+
+class do(Messenger):
+    """Intervention: clamp a sample site to a value *without* observing it,
+    severing its dependence on upstream randomness (causal ``do``-operator)."""
+
+    def __init__(self, fn=None, data: Optional[Dict] = None):
+        super().__init__(fn)
+        self.data = data or {}
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] == "sample" and msg["name"] in self.data:
+            msg["value"] = self.data[msg["name"]]
+            msg["stop"] = True
+
+
+__all__ = [
+    "Messenger", "trace", "replay", "seed", "substitute", "condition",
+    "block", "mask", "scale", "do",
+]

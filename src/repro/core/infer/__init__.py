@@ -1,0 +1,28 @@
+from .autoguide import AutoNormal
+from .diagnostics import (
+    effective_sample_size,
+    gelman_rubin,
+    hpdi,
+    print_summary,
+    summary,
+)
+from .hmc import HMC, NUTS, HMCState
+from .mcmc import MCMC
+from .svi import SVI, SVIState, Trace_ELBO
+from .util import (
+    Predictive,
+    constrain_fn,
+    initialize_model,
+    log_density,
+    log_likelihood,
+    potential_energy,
+    transform_fn,
+)
+
+__all__ = [
+    "HMC", "NUTS", "HMCState", "MCMC", "SVI", "SVIState", "Trace_ELBO",
+    "AutoNormal", "Predictive", "log_density", "log_likelihood",
+    "potential_energy", "transform_fn", "constrain_fn", "initialize_model",
+    "effective_sample_size", "gelman_rubin", "hpdi", "summary",
+    "print_summary",
+]

@@ -1,0 +1,75 @@
+"""Automatic variational guides."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .. import dist as _dist
+from ..dist.transforms import biject_to
+from ..handlers import block, seed, trace
+from ..primitives import param, sample
+from .util import get_model_transforms
+
+
+class AutoNormal:
+    """Mean-field normal guide on the unconstrained space of each latent."""
+
+    def __init__(self, model, prefix="auto", init_scale=0.1):
+        self.model = model
+        self.prefix = prefix
+        self.init_scale = init_scale
+        self._transforms = None
+        self._shapes = None
+
+    def _setup(self, *args, **kwargs):
+        if self._transforms is None:
+            transforms, tr = get_model_transforms(self.model, args, kwargs)
+            self._transforms = transforms
+            self._shapes = {
+                n: jnp.shape(transforms[n].inv(tr[n]["value"]))
+                for n in transforms
+            }
+
+    def __call__(self, *args, **kwargs):
+        self._setup(*args, **kwargs)
+        result = {}
+        for name, t in self._transforms.items():
+            shape = self._shapes[name]
+            loc = param(f"{self.prefix}_{name}_loc", jnp.zeros(shape))
+            log_scale = param(f"{self.prefix}_{name}_scale",
+                              jnp.full(shape, jnp.log(self.init_scale)))
+            base = _dist.Normal(loc, jnp.exp(log_scale))
+            if len(shape):
+                base = base.to_event(len(shape))
+            u = sample(f"{self.prefix}_{name}_base", base,
+                       infer={"is_auxiliary": True})
+            value = t(u)
+            # score the latent under a Delta carrying -log|det J| so the
+            # guide density on the constrained value is exact; spread the
+            # scalar total evenly so summing over event dims reproduces it
+            ladj_total = -jnp.sum(t.log_abs_det_jacobian(u, value))
+            size = max(int(jnp.size(value)), 1)
+            ld_elem = jnp.broadcast_to(ladj_total / size, jnp.shape(value))
+            result[name] = sample(
+                name, _dist.Delta(value, log_density=ld_elem,
+                                  event_dim=len(jnp.shape(value))))
+        return result
+
+    def median(self, params):
+        out = {}
+        for name, t in self._transforms.items():
+            loc = params[f"{self.prefix}_{name}_loc"]
+            out[name] = t(loc)
+        return out
+
+    def sample_posterior(self, rng_key, params, num_samples=1000):
+        out = {}
+        keys = jax.random.split(rng_key, len(self._transforms))
+        for key, (name, t) in zip(keys, self._transforms.items()):
+            loc = params[f"{self.prefix}_{name}_loc"]
+            scale = jnp.exp(params[f"{self.prefix}_{name}_scale"])
+            u = loc + scale * jax.random.normal(
+                key, (num_samples,) + loc.shape)
+            out[name] = t(u)
+        return out

@@ -1,0 +1,117 @@
+"""MCMC diagnostics: effective sample size (Geyer initial monotone sequence),
+split Gelman-Rubin R-hat, HPDI, and summary printing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _autocovariance(x):
+    """Autocovariance along axis 0 via FFT. x: (n, ...)."""
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    x = x - x.mean(0, keepdims=True)
+    m = 1
+    while m < 2 * n:
+        m *= 2
+    f = np.fft.rfft(x, n=m, axis=0)
+    acov = np.fft.irfft(f * np.conj(f), n=m, axis=0)[:n]
+    return acov / n
+
+
+def effective_sample_size(x):
+    """ESS of ``x`` with shape (num_chains, num_samples, ...)."""
+    x = np.asarray(x, np.float64)
+    if x.ndim == 1:
+        x = x[None, :]
+    c, n = x.shape[:2]
+    acov = np.stack([_autocovariance(x[i]) for i in range(c)], 0)  # (c,n,...)
+    chain_var = acov[:, 0]                       # biased variance per chain
+    mean_var = chain_var.mean(0)                 # W
+    var_plus = mean_var * (n - 1) / n
+    if c > 1:
+        var_plus = var_plus + x.mean(1).var(0, ddof=1)  # + B/n
+    rho = 1.0 - (mean_var - acov.mean(0)) / np.where(var_plus == 0, 1.0,
+                                                     var_plus)
+    rho[0] = 1.0
+    # Geyer: sums of adjacent pairs, initial positive + monotone decreasing
+    t_max = (n - 1) // 2
+    rho_even = rho[0:2 * t_max:2]
+    rho_odd = rho[1:2 * t_max:2]
+    pair = rho_even + rho_odd                    # (t_max, ...)
+    pair = np.where(pair > 0, pair, 0.0)
+    # enforce monotone non-increasing
+    pair = np.minimum.accumulate(pair, axis=0)
+    # zero out everything after the first non-positive pair
+    positive = pair > 0
+    keep = np.logical_and.accumulate(positive, axis=0)
+    tau = -1.0 + 2.0 * (pair * keep).sum(0)
+    ess = c * n / np.maximum(tau, 1.0 / (c * n))
+    return ess
+
+
+def gelman_rubin(x):
+    """Split R-hat; x: (num_chains, num_samples, ...)."""
+    x = np.asarray(x, np.float64)
+    if x.ndim == 1:
+        x = x[None, :]
+    c, n = x.shape[:2]
+    half = n // 2
+    splits = np.concatenate([x[:, :half], x[:, half:2 * half]], 0)
+    m, n2 = splits.shape[:2]
+    chain_mean = splits.mean(1)
+    chain_var = splits.var(1, ddof=1)
+    W = chain_var.mean(0)
+    B = n2 * chain_mean.var(0, ddof=1)
+    var_plus = (n2 - 1) / n2 * W + B / n2
+    return np.sqrt(var_plus / np.where(W == 0, 1.0, W))
+
+
+def hpdi(x, prob=0.9, axis=0):
+    x = np.sort(np.asarray(x), axis=axis)
+    n = x.shape[axis]
+    mass = int(np.floor(prob * n))
+    starts = np.take(x, np.arange(n - mass), axis=axis)
+    ends = np.take(x, np.arange(mass, n), axis=axis)
+    widths = ends - starts
+    best = np.argmin(widths, axis=axis)
+    lo = np.take_along_axis(starts, np.expand_dims(best, axis), axis=axis)
+    hi = np.take_along_axis(ends, np.expand_dims(best, axis), axis=axis)
+    return np.squeeze(lo, axis), np.squeeze(hi, axis)
+
+
+def summary(samples_by_chain, prob=0.9):
+    """Dict of per-site statistics; values shaped (chains, samples, ...)."""
+    out = {}
+    for name, x in samples_by_chain.items():
+        x = np.asarray(x)
+        flat = x.reshape(x.shape[0], x.shape[1], -1)
+        stats = {
+            "mean": flat.mean((0, 1)),
+            "std": flat.std((0, 1)),
+            "median": np.median(flat, (0, 1)),
+            "n_eff": np.stack([effective_sample_size(flat[..., i])
+                               for i in range(flat.shape[-1])]),
+            "r_hat": np.stack([gelman_rubin(flat[..., i])
+                               for i in range(flat.shape[-1])]),
+        }
+        out[name] = {k: v.reshape(x.shape[2:]) for k, v in stats.items()}
+    return out
+
+
+def print_summary(samples_by_chain, prob=0.9):
+    stats = summary(samples_by_chain, prob)
+    header = f"{'site':>20} {'mean':>10} {'std':>10} {'median':>10} " \
+             f"{'n_eff':>10} {'r_hat':>8}"
+    print(header)
+    for name, s in stats.items():
+        mean = np.atleast_1d(s["mean"]).ravel()
+        std = np.atleast_1d(s["std"]).ravel()
+        med = np.atleast_1d(s["median"]).ravel()
+        ne = np.atleast_1d(s["n_eff"]).ravel()
+        rh = np.atleast_1d(s["r_hat"]).ravel()
+        for i in range(mean.size):
+            label = name if mean.size == 1 else f"{name}[{i}]"
+            print(f"{label:>20} {mean[i]:>10.4f} {std[i]:>10.4f} "
+                  f"{med[i]:>10.4f} {ne[i]:>10.1f} {rh[i]:>8.3f}")
+    return stats

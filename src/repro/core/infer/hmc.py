@@ -1,0 +1,280 @@
+"""HMC and NUTS kernels with Stan-style windowed warmup adaptation.
+
+Both kernels are pure functions of their state, so a whole chain — warmup
+adaptation included — compiles to a single XLA program (``lax.scan`` over
+``sample_kernel``).  This is the end-to-end-JIT property the paper
+demonstrates (Sec. 3.1).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .hmc_util import (
+    DAState,
+    IntegratorState,
+    TreeState,
+    WelfordState,
+    build_adaptation_schedule,
+    build_tree,
+    dual_averaging_init,
+    dual_averaging_update,
+    find_reasonable_step_size,
+    kinetic_energy,
+    momentum_sample,
+    velocity_verlet,
+    welford_covariance,
+    welford_init,
+    welford_update,
+)
+from .util import initialize_model
+
+
+class AdaptState(NamedTuple):
+    step_size: jnp.ndarray
+    inverse_mass_matrix: jnp.ndarray
+    da_state: DAState
+    welford: WelfordState
+    window_idx: jnp.ndarray
+
+
+class HMCState(NamedTuple):
+    i: jnp.ndarray
+    z: jnp.ndarray                  # flat unconstrained position
+    potential_energy: jnp.ndarray
+    z_grad: jnp.ndarray
+    energy: jnp.ndarray
+    num_steps: jnp.ndarray          # leapfrog steps this iteration
+    accept_prob: jnp.ndarray
+    mean_accept_prob: jnp.ndarray
+    diverging: jnp.ndarray
+    adapt_state: AdaptState
+    rng_key: jnp.ndarray
+
+
+class HMC:
+    """Vanilla HMC with fixed/jittered trajectory length."""
+
+    def __init__(self, model=None, potential_fn=None, step_size=1.0,
+                 trajectory_length=2 * jnp.pi, adapt_step_size=True,
+                 adapt_mass_matrix=True, dense_mass=False,
+                 target_accept_prob=0.8, init_strategy="uniform"):
+        self.model = model
+        self.potential_fn = potential_fn
+        self._step_size = step_size
+        self._trajectory_length = trajectory_length
+        self._adapt_step_size = adapt_step_size
+        self._adapt_mass_matrix = adapt_mass_matrix
+        self._dense_mass = dense_mass
+        self._target = target_accept_prob
+        self._init_strategy = init_strategy
+        self._algo = "HMC"
+        self._max_tree_depth = 10
+
+    # -- setup ---------------------------------------------------------------
+    def init(self, rng_key, num_warmup, init_params=None, model_args=(),
+             model_kwargs=None):
+        model_kwargs = model_kwargs or {}
+        if self.model is not None:
+            (z, pot_fn, unravel, transforms, constrain, tr) = initialize_model(
+                rng_key, self.model, model_args, model_kwargs,
+                init_strategy=self._init_strategy)
+            self.potential_fn = pot_fn
+            self._unravel_fn = unravel
+            self._constrain_fn = constrain
+            if init_params is not None:
+                from jax.flatten_util import ravel_pytree
+                z = ravel_pytree({k: transforms[k].inv(v)
+                                  for k, v in init_params.items()})[0]
+        else:
+            if init_params is None:
+                raise ValueError("potential_fn mode requires init_params")
+            from jax.flatten_util import ravel_pytree
+            z, unravel = ravel_pytree(init_params)
+            self._unravel_fn = unravel
+            self._constrain_fn = unravel
+
+        self._num_warmup = num_warmup
+        d = z.shape[0]
+        imm = (jnp.ones(d) if not self._dense_mass else jnp.eye(d))
+        pe, grad = jax.value_and_grad(self.potential_fn)(z)
+
+        rng_key, ss_key = jax.random.split(rng_key)
+        if self._adapt_step_size:
+            step_size = find_reasonable_step_size(
+                self.potential_fn, imm, z, pe, grad, ss_key,
+                init_step_size=self._step_size)
+        else:
+            step_size = jnp.asarray(self._step_size, jnp.float32)
+
+        da = dual_averaging_init(jnp.log(step_size))
+        wf = welford_init(d, diagonal=not self._dense_mass)
+        adapt = AdaptState(step_size, imm, da, wf,
+                           jnp.zeros((), jnp.int32))
+
+        self._schedule = build_adaptation_schedule(num_warmup)
+        # window-end table for jittable lookup
+        self._window_ends = jnp.asarray(
+            [e for (_, e) in self._schedule], jnp.int32)
+        self._is_middle = jnp.asarray(
+            [1 if 0 < i < len(self._schedule) - 1 else 0
+             for i in range(len(self._schedule))], jnp.int32) \
+            if len(self._schedule) > 2 else jnp.zeros(
+                (max(len(self._schedule), 1),), jnp.int32)
+
+        return HMCState(
+            i=jnp.zeros((), jnp.int32), z=z, potential_energy=pe, z_grad=grad,
+            energy=pe, num_steps=jnp.zeros((), jnp.int32),
+            accept_prob=jnp.zeros(()), mean_accept_prob=jnp.zeros(()),
+            diverging=jnp.zeros((), bool), adapt_state=adapt, rng_key=rng_key)
+
+    # -- adaptation ----------------------------------------------------------
+    def _in_middle_window(self, t):
+        # t inside any middle window?
+        if len(self._schedule) <= 2:
+            return jnp.zeros((), bool)
+        starts = jnp.asarray([s for (s, _) in self._schedule], jnp.int32)
+        ends = self._window_ends
+        mids = self._is_middle.astype(bool)
+        inside = (t >= starts) & (t <= ends) & mids
+        return inside.any()
+
+    def _window_end_is_middle(self, t):
+        if len(self._schedule) <= 2:
+            return jnp.zeros((), bool)
+        ends = self._window_ends
+        mids = self._is_middle.astype(bool)
+        return ((t == ends) & mids).any()
+
+    def _adapt(self, state: HMCState, accept_prob) -> AdaptState:
+        adapt = state.adapt_state
+        t = state.i
+        # 1) dual averaging on log step size
+        if self._adapt_step_size:
+            da = dual_averaging_update(adapt.da_state,
+                                       self._target - accept_prob)
+            step_size = jnp.exp(da.x)
+        else:
+            da, step_size = adapt.da_state, adapt.step_size
+        if not self._adapt_mass_matrix:
+            return AdaptState(step_size, adapt.inverse_mass_matrix, da,
+                              adapt.welford, adapt.window_idx)
+        # 2) welford accumulation inside middle windows
+        in_mid = self._in_middle_window(t)
+        wf = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(in_mid, new, old),
+            welford_update(adapt.welford, state.z), adapt.welford)
+        # 3) at the end of a middle window: refresh the mass matrix,
+        #    reset welford, restart dual averaging from the averaged iterate
+        at_end = self._window_end_is_middle(t)
+
+        def refresh(_):
+            imm = welford_covariance(wf)
+            wf_new = welford_init(state.z.shape[0],
+                                  diagonal=not self._dense_mass)
+            if self._adapt_step_size:
+                ss = jnp.exp(da.x_avg)
+                da_new = dual_averaging_init(jnp.log(ss))
+            else:
+                ss, da_new = step_size, da
+            return imm, wf_new, da_new, ss
+
+        def keep(_):
+            return adapt.inverse_mass_matrix, wf, da, step_size
+
+        imm, wf, da, step_size = lax.cond(at_end, refresh, keep, None)
+        # final step of warmup: freeze averaged step size
+        if self._adapt_step_size:
+            is_last = t == (self._num_warmup - 1)
+            step_size = jnp.where(is_last, jnp.exp(da.x_avg), step_size)
+        return AdaptState(step_size, imm, da, wf,
+                          adapt.window_idx + at_end.astype(jnp.int32))
+
+    # -- transition ----------------------------------------------------------
+    def _num_leapfrog(self, step_size):
+        return jnp.clip(
+            jnp.ceil(self._trajectory_length / step_size).astype(jnp.int32),
+            1, 1024)
+
+    def sample(self, state: HMCState) -> HMCState:
+        rng_key, key_mom, key_tr, key_accept = jax.random.split(
+            state.rng_key, 4)
+        adapt = state.adapt_state
+        imm, step_size = adapt.inverse_mass_matrix, adapt.step_size
+        r = momentum_sample(key_mom, imm, state.z.dtype)
+        energy_cur = state.potential_energy + kinetic_energy(imm, r)
+        _, vv_update = velocity_verlet(self.potential_fn)
+
+        if self._algo == "NUTS":
+            tree = build_tree(vv_update, imm, step_size, key_tr,
+                              IntegratorState(state.z, r,
+                                              state.potential_energy,
+                                              state.z_grad),
+                              max_tree_depth=self._max_tree_depth)
+            accept_prob = tree.sum_accept_probs / jnp.maximum(
+                tree.num_proposals, 1)
+            z, pe, grad = tree.z_proposal, tree.z_proposal_pe, \
+                tree.z_proposal_grad
+            energy = tree.z_proposal_energy
+            num_steps = tree.num_proposals
+            diverging = tree.diverging
+        else:
+            n_steps = self._num_leapfrog(step_size)
+
+            def body(i, s):
+                return vv_update(step_size, imm, s)
+
+            nxt = lax.fori_loop(
+                0, n_steps, body,
+                IntegratorState(state.z, r, state.potential_energy,
+                                state.z_grad))
+            energy_new = nxt.potential_energy + kinetic_energy(imm, nxt.r)
+            delta = jnp.where(jnp.isnan(energy_new), jnp.inf,
+                              energy_new - energy_cur)
+            accept_prob = jnp.clip(jnp.exp(-delta), max=1.0)
+            accept = jax.random.uniform(key_accept) < accept_prob
+            z, pe, grad, energy = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(accept, a, b),
+                (nxt.z, nxt.potential_energy, nxt.z_grad, energy_new),
+                (state.z, state.potential_energy, state.z_grad, energy_cur))
+            num_steps = n_steps
+            diverging = delta > 1000.0
+
+        in_warmup = state.i < self._num_warmup
+        new_adapt = lax.cond(in_warmup,
+                             lambda _: self._adapt(state._replace(
+                                 adapt_state=adapt), accept_prob),
+                             lambda _: adapt, None)
+        i = state.i + 1
+        # running mean accept prob over the post-warmup phase
+        n_post = jnp.maximum(i - self._num_warmup, 1)
+        mean_ap = jnp.where(
+            in_warmup, accept_prob,
+            state.mean_accept_prob + (accept_prob - state.mean_accept_prob)
+            / n_post)
+        return HMCState(i, z, pe, grad, energy, num_steps, accept_prob,
+                        mean_ap, diverging, new_adapt, rng_key)
+
+    # convenience: map flat unconstrained vector to constrained dict
+    def constrain(self, z):
+        return self._constrain_fn(z)
+
+
+class NUTS(HMC):
+    """No-U-Turn Sampler with the paper's iterative, fully-jittable tree."""
+
+    def __init__(self, model=None, potential_fn=None, step_size=1.0,
+                 adapt_step_size=True, adapt_mass_matrix=True,
+                 dense_mass=False, target_accept_prob=0.8,
+                 max_tree_depth=10, init_strategy="uniform"):
+        super().__init__(model=model, potential_fn=potential_fn,
+                         step_size=step_size, adapt_step_size=adapt_step_size,
+                         adapt_mass_matrix=adapt_mass_matrix,
+                         dense_mass=dense_mass,
+                         target_accept_prob=target_accept_prob,
+                         init_strategy=init_strategy)
+        self._algo = "NUTS"
+        self._max_tree_depth = max_tree_depth

@@ -1,0 +1,200 @@
+"""Inference utilities: log densities, transforms to unconstrained space,
+model initialization, and vmap-powered predictive utilities (paper Sec 3.2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .. import dist as _dist
+from ..dist.transforms import biject_to
+from ..handlers import block, condition, seed, substitute, trace
+from ..primitives import sample as _sample
+
+
+def log_density(model, model_args, model_kwargs, params):
+    """Joint log density of ``model`` at ``params`` (constrained space).
+
+    Returns ``(log_joint, trace)``.  Respects per-site ``scale`` and ``mask``
+    set by handlers/plates.
+    """
+    substituted = substitute(model, data=params)
+    tr = trace(substituted).get_trace(*model_args, **model_kwargs)
+    log_joint = jnp.zeros(())
+    for site in tr.values():
+        if site["type"] != "sample":
+            continue
+        value = site["value"]
+        lp = site["fn"].log_prob(value)
+        if site["mask"] is not None:
+            lp = jnp.where(site["mask"], lp, 0.0)
+        if site["scale"] is not None:
+            lp = lp * site["scale"]
+        log_joint = log_joint + jnp.sum(lp)
+    return log_joint, tr
+
+
+def get_model_transforms(model, model_args=(), model_kwargs=None, rng_key=None):
+    """Trace the model once to discover latent sites and their bijections.
+
+    Wrapped in ``block`` so the exploratory trace never leaks sites into any
+    enclosing handler (e.g. when called from a guide that is itself being
+    traced).
+    """
+    model_kwargs = model_kwargs or {}
+    key = rng_key if rng_key is not None else jax.random.PRNGKey(0)
+    with block():
+        tr = trace(seed(model, key)).get_trace(*model_args, **model_kwargs)
+    transforms, latent_shapes = {}, {}
+    for name, site in tr.items():
+        if site["type"] == "sample" and not site["is_observed"]:
+            support = site["fn"].support
+            transforms[name] = biject_to(support)
+            latent_shapes[name] = jnp.shape(site["value"])
+    return transforms, tr
+
+
+def transform_fn(transforms, params, invert=False):
+    return {
+        k: transforms[k].inv(v) if invert else transforms[k](v)
+        for k, v in params.items()
+    }
+
+
+def constrain_fn(model, model_args, model_kwargs, transforms, params_uncon):
+    return transform_fn(transforms, params_uncon)
+
+
+def potential_energy(model, model_args, model_kwargs, transforms, params_uncon):
+    """-log p(constrained(z)) - log|det J(z)| on unconstrained space."""
+    params_con = {}
+    log_det = jnp.zeros(())
+    for name, t in transforms.items():
+        u = params_uncon[name]
+        x = t(u)
+        params_con[name] = x
+        ladj = t.log_abs_det_jacobian(u, x)
+        log_det = log_det + jnp.sum(ladj)
+    log_joint, _ = log_density(model, model_args, model_kwargs, params_con)
+    return -(log_joint + log_det)
+
+
+def initialize_model(rng_key, model, model_args=(), model_kwargs=None,
+                     init_strategy="uniform", radius=2.0, max_tries=100):
+    """Find valid initial unconstrained parameters with finite potential.
+
+    Returns ``(init_params_flat, potential_fn_flat, unravel_fn, transforms,
+    constrain, model_trace)``; everything downstream (integrator, NUTS tree)
+    works on a single flat vector so mass-matrix algebra and the U-turn
+    checkpointing arrays are simple ``(D,)``/``(depth, D)`` buffers.
+    """
+    model_kwargs = model_kwargs or {}
+    transforms, tr = get_model_transforms(model, model_args, model_kwargs, rng_key)
+    if not transforms:
+        raise ValueError("model has no latent sample sites")
+
+    # prototype unconstrained pytree (used for ravel/unravel structure)
+    proto = {}
+    for name, t in transforms.items():
+        value = tr[name]["value"]
+        proto[name] = t.inv(value)
+    flat_proto, unravel_fn = ravel_pytree(proto)
+
+    def potential_flat(zflat):
+        return potential_energy(model, model_args, model_kwargs, transforms,
+                                unravel_fn(zflat))
+
+    def constrain(zflat):
+        return transform_fn(transforms, unravel_fn(zflat))
+
+    def _try(key):
+        if init_strategy == "uniform":
+            z = jax.random.uniform(key, flat_proto.shape, minval=-radius,
+                                   maxval=radius)
+        elif init_strategy == "prior":
+            sub_tr = trace(seed(model, key)).get_trace(*model_args, **model_kwargs)
+            z = ravel_pytree({n: transforms[n].inv(sub_tr[n]["value"])
+                              for n in transforms})[0]
+        else:
+            raise ValueError(f"unknown init strategy {init_strategy}")
+        pe, grad = jax.value_and_grad(potential_flat)(z)
+        ok = jnp.isfinite(pe) & jnp.all(jnp.isfinite(grad))
+        return z, pe, grad, ok
+
+    def cond_fn(state):
+        i, _, _, _, ok, _ = state
+        return (~ok) & (i < max_tries)
+
+    def body_fn(state):
+        i, _, _, _, _, key = state
+        key, sub = jax.random.split(key)
+        z, pe, grad, ok = _try(sub)
+        return i + 1, z, pe, grad, ok, key
+
+    key0, sub0 = jax.random.split(rng_key)
+    z0, pe0, grad0, ok0 = _try(sub0)
+    _, z, pe, grad, ok, _ = jax.lax.while_loop(
+        cond_fn, body_fn, (jnp.zeros((), jnp.int32), z0, pe0, grad0, ok0, key0))
+    return z, potential_flat, unravel_fn, transforms, constrain, tr
+
+
+# ---------------------------------------------------------------------------
+# vmap-based predictive utilities (paper Fig. 1 / Listing 1)
+# ---------------------------------------------------------------------------
+
+class Predictive:
+    """Vectorized prior/posterior predictive sampling via ``vmap`` over
+    seeded + substituted model executions — no manual batch dims in the model.
+    """
+
+    def __init__(self, model, posterior_samples: Optional[Dict] = None,
+                 num_samples: Optional[int] = None, return_sites=None,
+                 parallel: bool = True):
+        if posterior_samples is None and num_samples is None:
+            raise ValueError("need posterior_samples or num_samples")
+        self.model = model
+        self.posterior_samples = posterior_samples or {}
+        if posterior_samples is not None:
+            sizes = {jnp.shape(v)[0] for v in posterior_samples.values()}
+            if len(sizes) != 1:
+                raise ValueError("inconsistent posterior sample counts")
+            num_samples = sizes.pop()
+        self.num_samples = num_samples
+        self.return_sites = return_sites
+        self.parallel = parallel
+
+    def __call__(self, rng_key, *args, **kwargs):
+        def single(key, samples):
+            m = substitute(seed(self.model, key), data=samples)
+            tr = trace(m).get_trace(*args, **kwargs)
+            sites = self.return_sites or [
+                n for n, s in tr.items()
+                if s["type"] in ("sample", "deterministic") and n not in samples
+            ]
+            return {n: tr[n]["value"] for n in sites}
+
+        keys = jax.random.split(rng_key, self.num_samples)
+        if self.parallel:
+            return jax.vmap(single)(keys, self.posterior_samples)
+        outs = [single(k, jax.tree_util.tree_map(lambda v: v[i],
+                                                 self.posterior_samples))
+                for i, k in enumerate(keys)]
+        return jax.tree_util.tree_map(lambda *x: jnp.stack(x), *outs)
+
+
+def log_likelihood(model, posterior_samples, *args, **kwargs):
+    """Per-sample log likelihood of observed sites, vectorized with vmap."""
+    def single(samples):
+        m = substitute(model, data=samples)
+        tr = trace(m).get_trace(*args, **kwargs)
+        return {
+            name: site["fn"].log_prob(site["value"])
+            for name, site in tr.items()
+            if site["type"] == "sample" and site["is_observed"]
+        }
+
+    return jax.vmap(single)(posterior_samples)

@@ -1,0 +1,227 @@
+"""Core language primitives: ``sample``, ``param``, ``deterministic``, ``plate``.
+
+These are the effectful statements of the probabilistic programming language.
+Each primitive constructs a *message* (a plain dict) and threads it through the
+handler stack (see :mod:`repro.core.handlers`).  Handlers run inside the Python
+runtime and are therefore transparent to the JAX tracer — they compose freely
+with ``jit``/``grad``/``vmap``/``pjit``/``shard_map`` (the paper's core claim).
+"""
+from __future__ import annotations
+
+from collections import namedtuple
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+_STACK: list = []  # the global effect-handler stack
+
+
+def stack() -> list:
+    return _STACK
+
+
+CondIndepStackFrame = namedtuple("CondIndepStackFrame", ["name", "dim", "size"])
+
+
+def default_process_message(msg: dict) -> None:
+    """Produce the message value if no handler already did."""
+    if msg["value"] is None:
+        if msg["type"] == "sample":
+            msg["value"] = msg["fn"](
+                rng_key=msg["kwargs"]["rng_key"],
+                sample_shape=msg["kwargs"]["sample_shape"],
+            )
+        else:
+            msg["value"] = msg["fn"](*msg["args"], **msg["kwargs"])
+
+
+def apply_stack(msg: dict) -> dict:
+    """Thread ``msg`` through the handler stack.
+
+    ``process_message`` runs from innermost (top of stack) to outermost; a
+    handler may set ``msg['stop'] = True`` to hide the site from outer
+    handlers (used by ``block``).  ``postprocess_message`` then runs from the
+    point we stopped back down to the innermost handler.
+    """
+    pointer = 0
+    for pointer, handler in enumerate(reversed(_STACK)):
+        handler.process_message(msg)
+        if msg.get("stop"):
+            break
+    default_process_message(msg)
+    for handler in _STACK[-pointer - 1:]:
+        handler.postprocess_message(msg)
+    return msg
+
+
+def _masked_observe_shape(fn, obs):
+    return obs
+
+
+def sample(
+    name: str,
+    fn,
+    obs=None,
+    rng_key=None,
+    sample_shape: tuple = (),
+    infer: Optional[dict] = None,
+):
+    """Draw a (named) random sample from distribution ``fn``.
+
+    With ``obs`` the site is observed and contributes ``fn.log_prob(obs)`` to
+    the joint density.  Without an enclosing :class:`~repro.core.handlers.seed`
+    handler an explicit ``rng_key`` must be supplied (JAX functional PRNG).
+    """
+    if not _STACK:
+        if obs is not None:
+            return obs
+        if rng_key is None:
+            raise ValueError(
+                f"sample site '{name}' outside any handler requires an explicit "
+                "rng_key (JAX uses a functional PRNG; see the `seed` handler)."
+            )
+        return fn(rng_key=rng_key, sample_shape=sample_shape)
+
+    msg = {
+        "type": "sample",
+        "name": name,
+        "fn": fn,
+        "args": (),
+        "kwargs": {"rng_key": rng_key, "sample_shape": sample_shape},
+        "value": obs,
+        "is_observed": obs is not None,
+        "scale": None,
+        "mask": None,
+        "cond_indep_stack": [],
+        "infer": infer or {},
+    }
+    return apply_stack(msg)["value"]
+
+
+def param(name: str, init_value=None, *, shape=None, init_fn=None, dtype=jnp.float32,
+          sharding=None, **kwargs):
+    """Declare a learnable parameter.
+
+    Either pass a concrete ``init_value``, or ``shape`` (+ optional ``init_fn``
+    taking ``(rng_key, shape, dtype)``) for lazy initialization under a
+    ``seed`` handler.  ``sharding`` carries a :class:`PartitionSpec` hint the
+    distributed runtime uses to place the parameter on the mesh.
+    """
+    if not _STACK:
+        return init_value
+
+    def identity(*args, **kw):
+        return init_value
+
+    msg = {
+        "type": "param",
+        "name": name,
+        "fn": identity,
+        "args": (),
+        "kwargs": dict(kwargs, shape=shape, init_fn=init_fn, dtype=dtype),
+        "value": None,
+        "is_observed": False,
+        "scale": None,
+        "mask": None,
+        "cond_indep_stack": [],
+        "sharding": sharding,
+        "infer": {},
+    }
+    result = apply_stack(msg)["value"]
+    if result is None:
+        raise ValueError(
+            f"param site '{name}' has no value: provide init_value, or run under "
+            "a `substitute`/`seed` handler that materializes parameters."
+        )
+    return result
+
+
+def deterministic(name: str, value):
+    """Record a deterministic value in the trace (for downstream analysis)."""
+    if not _STACK:
+        return value
+    msg = {
+        "type": "deterministic",
+        "name": name,
+        "fn": lambda: value,
+        "args": (),
+        "kwargs": {},
+        "value": value,
+        "is_observed": False,
+        "scale": None,
+        "mask": None,
+        "cond_indep_stack": [],
+        "infer": {},
+    }
+    return apply_stack(msg)["value"]
+
+
+class plate:
+    """Conditional-independence context manager.
+
+    Samples drawn inside are batched along ``dim`` (negative, counted from the
+    right of the batch shape) and, when ``subsample_size`` is given, log
+    densities are rescaled by ``size / subsample_size`` (for subsampled data /
+    stochastic VI on minibatches).
+    """
+
+    def __init__(self, name: str, size: int, subsample_size: Optional[int] = None,
+                 dim: Optional[int] = None):
+        if size <= 0:
+            raise ValueError(f"plate '{name}' needs positive size, got {size}")
+        self.name = name
+        self.size = size
+        self.subsample_size = size if subsample_size is None else subsample_size
+        if dim is not None and dim >= 0:
+            raise ValueError("plate dim must be negative (counted from the right)")
+        self.dim = dim
+        self._guard = None
+
+    def _current_frames(self):
+        return [f for h in _STACK if isinstance(h, plate) and h._guard is not None
+                for f in [h._frame]]
+
+    def __enter__(self):
+        occupied = {f.dim for f in self._current_frames()}
+        if self.dim is None:
+            dim = -1
+            while dim in occupied:
+                dim -= 1
+            self.dim = dim
+        elif self.dim in occupied:
+            raise ValueError(f"plate dim {self.dim} already occupied")
+        self._frame = CondIndepStackFrame(self.name, self.dim, self.subsample_size)
+        self._guard = True
+        _STACK.append(self)
+        return jnp.arange(self.subsample_size)
+
+    def __exit__(self, *exc):
+        _STACK.pop()
+        self._guard = None
+        return False
+
+    # --- handler protocol -------------------------------------------------
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] not in ("sample",):
+            return
+        msg["cond_indep_stack"].append(self._frame)
+        if msg["value"] is None:
+            # expand the distribution batch shape along our dim
+            fn = msg["fn"]
+            batch_shape = getattr(fn, "batch_shape", ())
+            target = self._expanded_shape(batch_shape)
+            if tuple(target) != tuple(batch_shape):
+                msg["fn"] = fn.expand(tuple(target))
+        if self.size != self.subsample_size:
+            scale = self.size / self.subsample_size
+            msg["scale"] = scale if msg["scale"] is None else msg["scale"] * scale
+
+    def postprocess_message(self, msg: dict) -> None:
+        pass
+
+    def _expanded_shape(self, batch_shape):
+        ndim = max(len(batch_shape), -self.dim)
+        shape = [1] * ndim
+        shape[len(shape) - len(batch_shape):] = list(batch_shape)
+        shape[self.dim] = self.subsample_size
+        return shape

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, SyntheticSeq2SeqData
+
+__all__ = ["SyntheticLMData", "SyntheticSeq2SeqData"]

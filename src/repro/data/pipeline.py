@@ -1,0 +1,72 @@
+"""Deterministic, shard-aware synthetic token pipeline.
+
+Determinism-by-step is the fault-tolerance contract: ``batch_at(step)`` is a
+pure function of (seed, step, shard), so a restarted / re-scheduled worker
+replays exactly its shard of the global batch with no cross-worker skew, and
+elastic restarts (different dp_size) re-partition the same global stream.
+
+Documents are sampled with ~geometric lengths and packed into fixed windows
+separated by EOS — enough structure for throughput benchmarking and loss
+sanity (per-token entropy is known), with zero I/O dependencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mean_doc_len: int = 512
+    eos_id: int = 2
+
+    def batch_at(self, step: int, dp_rank: int = 0, dp_size: int = 1):
+        """Local slice of the global batch for this step."""
+        assert self.global_batch % dp_size == 0
+        local = self.global_batch // dp_size
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        key = jax.random.fold_in(key, dp_rank)
+        k1, k2 = jax.random.split(key)
+        tokens = jax.random.randint(
+            k1, (local, self.seq_len), 3, self.vocab_size, dtype=jnp.int32)
+        # EOS document boundaries with ~geometric spacing
+        boundary = (jax.random.uniform(k2, (local, self.seq_len))
+                    < 1.0 / self.mean_doc_len)
+        tokens = jnp.where(boundary, self.eos_id, tokens)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((local, 1), self.eos_id, jnp.int32)],
+            axis=1)
+        return {"tokens": tokens, "labels": labels}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSeq2SeqData:
+    """Encoder-decoder (audio/vision stubs): precomputed frontend embeddings
+    + target tokens.  ``d_model`` features are standard-normal."""
+    vocab_size: int
+    src_len: int
+    tgt_len: int
+    d_model: int
+    global_batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int, dp_rank: int = 0, dp_size: int = 1):
+        assert self.global_batch % dp_size == 0
+        local = self.global_batch // dp_size
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        key = jax.random.fold_in(key, dp_rank)
+        k1, k2 = jax.random.split(key)
+        src = jax.random.normal(
+            k1, (local, self.src_len, self.d_model), jnp.bfloat16)
+        tokens = jax.random.randint(
+            k2, (local, self.tgt_len), 3, self.vocab_size, dtype=jnp.int32)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((local, 1), 2, jnp.int32)], axis=1)
+        return {"src_embeds": src, "tokens": tokens, "labels": labels}

@@ -1,0 +1,3 @@
+from . import checkpoint, sharding
+
+__all__ = ["checkpoint", "sharding"]

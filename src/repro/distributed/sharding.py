@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules: map weight/activation logical names to mesh
+axes per architecture family.
+
+Production mesh (per the assignment): single pod ``(data=16, model=16)``,
+multi-pod ``(pod=2, data=16, model=16)``.  Design (DESIGN.md §6):
+
+  * batch            -> all DP axes (pod, data): pure DP across pods so no
+                        cross-pod model collectives ride the DCN.
+  * seq              -> model (sequence parallelism for the residual stream
+                        between blocks; attention re-gathers seq and shards
+                        heads locally — GSPMD inserts the transposes).
+  * heads/kv/mlp/vocab -> model  (tensor parallelism; flattened head dims).
+  * embed (weights)  -> data     (FSDP: every weight's non-TP dim).
+  * expert           -> EP axes: (data, model) = 256-way for the big MoEs
+                        (experts padded to a multiple), (model,) for Jamba.
+  * expert_inner     -> FSDP axis for Jamba's expert f-dim (all-gathered
+                        inside the shard_map EP block, reduce-scattered on
+                        the way back in AD).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+DP_AXES_1POD = ("data",)
+DP_AXES_MPOD = ("pod", "data")
+
+
+def make_rules(cfg: ModelConfig, mesh, seq_parallel: bool = True,
+               sp_scoped: bool = False) -> dict:
+    """``seq_parallel=False`` keeps the residual stream replicated along
+    sequence (activations batch-sharded only): trades 16x activation memory
+    for weight-grad reductions over the data axis only (§Perf H2).
+
+    ``sp_scoped`` (Megatron-style scoped SP, §Perf H5): the residual stream
+    and saved remat carries STAY sequence-sharded (seq -> model), but
+    block-internal activations gather the sequence (seq_inner -> None), so
+    weight-grad contractions run over the full local sequence and reduce
+    over the data axis only — the HBM-feasible version of H2."""
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    rules = {
+        "batch": dp,
+        "seq": "model" if seq_parallel else None,
+        "embed": "data",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "layers": None,
+    }
+    if sp_scoped or not seq_parallel:
+        # block-internal activations gather the sequence (a logical name
+        # ABSENT from the rules means "leave the layout to GSPMD")
+        rules["seq_inner"] = None
+    if cfg.moe:
+        if big_ep(cfg):
+            rules["expert"] = ("data", "model")
+            rules["expert_inner"] = None
+        else:
+            rules["expert"] = ("model",)
+            rules["expert_inner"] = "data"
+    return rules
+
+
+def big_ep(cfg: ModelConfig) -> bool:
+    """Experts >= devices-per-pod/2 -> EP over (data, model)."""
+    return cfg.num_experts >= 64
+
+
+def ep_degree_for(cfg: ModelConfig) -> int:
+    """EP degree implied by the ACTIVE sharding context (1 off-mesh, so smoke
+    tests and dry-runs build consistent parameter shapes per context)."""
+    from repro.models.common import current_mesh, current_rules
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None or not cfg.moe:
+        return 1
+    ep_axes = rules.get("expert") or ()
+    if isinstance(ep_axes, str):
+        ep_axes = (ep_axes,)
+    deg = 1
+    for a in ep_axes:
+        deg *= mesh.shape[a]
+    return deg
+
+
+def logical_to_partition(logical, rules) -> P:
+    """Tuple of logical axis names (or None) -> PartitionSpec."""
+    if logical is None:
+        return P()
+    out = []
+    for name in logical:
+        r = rules.get(name) if name is not None else None
+        out.append(tuple(r) if isinstance(r, (list, tuple)) else r)
+    return P(*out)
+
+
+def _axes_size(entry, mesh) -> int:
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else entry
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def divisible_partition(spec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they don't evenly divide (e.g. odd vocab
+    sizes like 50280 stay replicated on that dim rather than failing)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape) or shape[i] % _axes_size(entry, mesh) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def param_shardings(spec_tree, rules, mesh, shapes=None):
+    """Logical-name pytree (from LM.abstract_params) -> NamedSharding tree.
+    With ``shapes`` (matching pytree of ShapeDtypeStructs), non-divisible
+    dims are de-sharded instead of erroring."""
+    import jax
+
+    def one(logical, shape=None):
+        spec = logical_to_partition(logical, rules)
+        if shape is not None:
+            spec = divisible_partition(spec, shape.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    is_leaf = lambda x: x is None or isinstance(x, tuple)  # noqa: E731
+    if shapes is None:
+        return jax.tree.map(one, spec_tree, is_leaf=is_leaf)
+    # map with the shapes tree in lockstep
+    flat_spec = jax.tree.flatten(spec_tree, is_leaf=is_leaf)[0]
+    flat_shape, treedef = jax.tree.flatten(shapes)
+    return jax.tree.unflatten(
+        treedef, [one(sp, sh) for sp, sh in zip(flat_spec, flat_shape)])
+
+
+def batch_sharding(rules, mesh, ndim=2):
+    dp = rules["batch"]
+    return NamedSharding(mesh, P(tuple(dp), *([None] * (ndim - 1))))
+
+
+def cache_sharding(rules, mesh):
+    """KV caches: batch over DP, sequence over model (flash-decoding layout:
+    each model shard holds a slice of history; partial-softmax combines via
+    a small all-reduce)."""
+    dp = rules["batch"]
+    return NamedSharding(mesh, P(tuple(dp), "model"))

@@ -1,0 +1,268 @@
+"""Flash attention (GQA-aware) as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md): online-softmax tiling over VMEM blocks sized for
+the MXU — (bq, d) x (d, bk) score tiles, fp32 running (m, l, acc) scratch
+carried across the sequential k-block grid axis.  Handles H != K (grouped
+queries) by indexing the kv head as h // (H//K), and dq != dv (MLA's 192/128
+split heads).
+
+Backward is two Pallas kernels (dq; dkv) using the saved logsumexp — the
+standard flash-2 recomputation scheme.  All kernels validate against
+kernels/ref.py in interpret mode (tests/test_kernels.py sweeps shapes and
+dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _grid_dims(S, bq, bk):
+    return S // bq, S // bk
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, scale, causal, bq, bk, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, dq)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dq)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    if causal:
+        iq = pl.program_id(1)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = m_scr[...] + jnp.log(l)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, scale, causal, bq, bk, interpret):
+    o, _ = _flash_fwd_impl(q, k, v, scale, causal, bq, bk, interpret)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, bq, bk, interpret):
+    B, S, H, dq = q.shape
+    K, dv = k.shape[2], v.shape[3]
+    G = H // K
+    nq, nk = _grid_dims(S, bq, bk)
+    grid = (B * H, nq, nk)
+
+    qspec = pl.BlockSpec((1, bq, 1, dq),
+                         lambda bh, iq, ik: (bh // H, iq, bh % H, 0))
+    kspec = pl.BlockSpec((1, bk, 1, dq),
+                         lambda bh, iq, ik: (bh // H, ik, (bh % H) // G, 0))
+    vspec = pl.BlockSpec((1, bk, 1, dv),
+                         lambda bh, iq, ik: (bh // H, ik, (bh % H) // G, 0))
+    ospec = pl.BlockSpec((1, bq, 1, dv),
+                         lambda bh, iq, ik: (bh // H, iq, bh % H, 0))
+    lspec = pl.BlockSpec((1, 1, bq), lambda bh, iq, ik: (bh // H, bh % H, iq))
+
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[qspec, kspec, vspec],
+        out_specs=[ospec, lspec],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, dv), q.dtype),
+                   jax.ShapeDtypeStruct((B, H, S), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, scale, causal, bq, bk, interpret):
+    o, lse = _flash_fwd_impl(q, k, v, scale, causal, bq, bk, interpret)
+    return o, (q, k, v, o, lse)
+
+
+# -- backward ----------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, scale, causal, bq, bk, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, 0, :]
+    delta = delta_ref[0, 0, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if causal:
+        iq = pl.program_id(1)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta[:, None]) * scale
+    acc_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        dq_ref[0, :, 0, :] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, bq, bk, nq):
+    iq = pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, 0, :]
+    delta = delta_ref[0, 0, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if causal:
+        ik = pl.program_id(1)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                      # (bq, bk)
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta[:, None]) * scale
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(iq == nq - 1)
+    def _done():
+        dk_ref[0, :, 0, :] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _flash_bwd(scale, causal, bq, bk, interpret, res, dout):
+    q, k, v, o, lse = res
+    B, S, H, dq_dim = q.shape
+    K, dv_dim = k.shape[2], v.shape[3]
+    G = H // K
+    nq, nk = _grid_dims(S, bq, bk)
+    delta = jnp.einsum("bshd,bshd->bhs", dout.astype(jnp.float32),
+                       o.astype(jnp.float32))
+
+    # dq pass: grid (BH, iq, ik): q indexed by iq
+    def mk(dims, f):
+        return pl.BlockSpec(dims, f)
+
+    dqspec_in = [
+        mk((1, bq, 1, dq_dim), lambda bh, iq, ik: (bh // H, iq, bh % H, 0)),
+        mk((1, bk, 1, dq_dim),
+           lambda bh, iq, ik: (bh // H, ik, (bh % H) // G, 0)),
+        mk((1, bk, 1, dv_dim),
+           lambda bh, iq, ik: (bh // H, ik, (bh % H) // G, 0)),
+        mk((1, bq, 1, dv_dim), lambda bh, iq, ik: (bh // H, iq, bh % H, 0)),
+        mk((1, 1, bq), lambda bh, iq, ik: (bh // H, bh % H, iq)),
+        mk((1, 1, bq), lambda bh, iq, ik: (bh // H, bh % H, iq)),
+    ]
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(B * H, nq, nk),
+        in_specs=dqspec_in,
+        out_specs=mk((1, bq, 1, dq_dim),
+                     lambda bh, iq, ik: (bh // H, iq, bh % H, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dq_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    # dkv pass: grid (BH, ik, iq); accumulate across q blocks, one (dk, dv)
+    # per *query* head: summed into K heads afterwards (G-fold reduction)
+    dkv_in = [
+        mk((1, bq, 1, dq_dim), lambda bh, ik, iq: (bh // H, iq, bh % H, 0)),
+        mk((1, bk, 1, dq_dim),
+           lambda bh, ik, iq: (bh // H, ik, (bh % H) // G, 0)),
+        mk((1, bk, 1, dv_dim),
+           lambda bh, ik, iq: (bh // H, ik, (bh % H) // G, 0)),
+        mk((1, bq, 1, dv_dim), lambda bh, ik, iq: (bh // H, iq, bh % H, 0)),
+        mk((1, 1, bq), lambda bh, ik, iq: (bh // H, bh % H, iq)),
+        mk((1, 1, bq), lambda bh, ik, iq: (bh // H, bh % H, iq)),
+    ]
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nq=nq),
+        grid=(B * H, nk, nq),
+        in_specs=dkv_in,
+        out_specs=[
+            mk((1, bk, 1, dq_dim), lambda bh, ik, iq: (bh // H, ik, bh % H,
+                                                       0)),
+            mk((1, bk, 1, dv_dim), lambda bh, ik, iq: (bh // H, ik, bh % H,
+                                                       0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, dq_dim), q.dtype),
+                   jax.ShapeDtypeStruct((B, S, H, dv_dim), q.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, dq_dim), jnp.float32),
+                        pltpu.VMEM((bk, dv_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+    dk = dk_h.reshape(B, S, K, G, dq_dim).sum(3).astype(k.dtype)
+    dv = dv_h.reshape(B, S, K, G, dv_dim).sum(3).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, window=0,
+                    bq=None, bk=None, interpret=False):
+    """Drop-in for kernels.ref.attention (window>0 falls back to the ref)."""
+    if window:
+        from . import ref
+        return ref.attention(q, k, v, causal=causal, scale=scale,
+                             window=window)
+    B, S, H, dq = q.shape
+    scale = (dq ** -0.5) if scale is None else scale
+    bq = bq or min(DEFAULT_BQ, S)
+    bk = bk or min(DEFAULT_BK, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    return _flash(q, k, v, scale, causal, bq, bk, interpret)

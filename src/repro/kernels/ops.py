@@ -1,0 +1,90 @@
+"""jit'd dispatch wrappers: one call site for Pallas kernels and jnp oracles.
+
+``use_pallas(True)`` (or env REPRO_USE_PALLAS=1) routes the hot ops through
+the Pallas TPU kernels in this package; the default (and the only option on
+the CPU backend, where Pallas TPU lowering is unavailable) is the pure-jnp
+reference path in :mod:`repro.kernels.ref`.  ``interpret=True`` is used by
+the test-suite to execute kernel bodies on CPU against the oracles.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+from . import ref
+
+_STATE = {"pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1",
+          "interpret": False,
+          "ssd_inline": os.environ.get("REPRO_SSD_INLINE", "0") == "1"}
+
+
+@contextmanager
+def use_pallas(enable=True, interpret=False):
+    old = dict(_STATE)
+    _STATE.update(pallas=enable, interpret=interpret)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def pallas_enabled():
+    return _STATE["pallas"]
+
+
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, scale=None, window=0):
+    if _STATE["pallas"]:
+        from .flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               window=window, interpret=_STATE["interpret"])
+    return ref.attention(q, k, v, causal=causal, scale=scale, window=window)
+
+
+def decode_attention(q, k, v, mask, *, scale=None):
+    return ref.decode_attention(q, k, v, mask, scale=scale)
+
+
+def mla_absorbed_decode(q_nope, q_rope, c_kv, k_rope, wk, wv, mask, *, scale):
+    return ref.mla_absorbed_decode(q_nope, q_rope, c_kv, k_rope, wk, wv,
+                                   mask, scale=scale)
+
+
+def rmsnorm(x, weight, eps=1e-6):
+    if _STATE["pallas"]:
+        from .rmsnorm import rmsnorm as _k
+        return _k(x, weight, eps=eps, interpret=_STATE["interpret"])
+    return ref.rmsnorm(x, weight, eps=eps)
+
+
+def softmax_xent(x, w_unembed, labels, *, z_loss_weight=0.0):
+    if _STATE["pallas"]:
+        from .softmax_xent import softmax_xent as _k
+        return _k(x, w_unembed, labels, z_loss_weight=z_loss_weight,
+                  interpret=_STATE["interpret"])
+    return ref.softmax_xent(x, w_unembed, labels, z_loss_weight=z_loss_weight)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk, D=None, h0=None):
+    if _STATE["pallas"]:
+        from .ssd_scan import ssd_scan as _k
+        return _k(x, dt, A, B, C, chunk=chunk, D=D, h0=h0,
+                  interpret=_STATE["interpret"])
+    if _STATE["ssd_inline"]:
+        return ref.ssd_scan_inline(x, dt, A, B, C, chunk=chunk, D=D, h0=h0)
+    return ref.ssd_scan(x, dt, A, B, C, chunk=chunk, D=D, h0=h0)
+
+
+@contextmanager
+def ssd_inline(enable=True):
+    old = _STATE["ssd_inline"]
+    _STATE["ssd_inline"] = enable
+    try:
+        yield
+    finally:
+        _STATE["ssd_inline"] = old
+
+
+def ssd_decode_step(state, x, dt, A, B, C, *, D=None):
+    return ref.ssd_decode_step(state, x, dt, A, B, C, D=D)

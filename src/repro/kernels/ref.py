@@ -1,0 +1,241 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantics; kernels in this package must match them to
+float tolerance (tests sweep shapes/dtypes in ``interpret=True`` mode).
+They are also the default execution path on CPU and for the dry-run
+(Pallas TPU lowering is unavailable on the CPU backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA-aware; covers MHA/MQA/MLA-shaped q/k/v)
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, scale=None, window=0):
+    """q: (B,S,H,dq)  k: (B,S,K,dq)  v: (B,S,K,dv)  with H % K == 0.
+
+    Returns (B,S,H,dv). Softmax in fp32. ``window`` > 0 gives sliding-window
+    (local) attention over the last ``window`` positions.
+    """
+    B, S, H, dq = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = (dq ** -0.5) if scale is None else scale
+    qg = q.reshape(B, S, K, G, dq)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = j <= i
+        if window:
+            mask = mask & (j > i - window)
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention(q, k, v, mask, *, scale=None):
+    """Single-query attention against a full cache.
+
+    q: (B,1,H,dq)  k: (B,S,K,dq)  v: (B,S,K,dv)  mask: (1|B, S) bool.
+    Returns (B,1,H,dv).
+    """
+    B, _, H, dq = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = (dq ** -0.5) if scale is None else scale
+    qg = q.reshape(B, K, G, dq)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, v.shape[-1]).astype(q.dtype)
+
+
+def mla_absorbed_decode(q_nope, q_rope, c_kv, k_rope, wk, wv, mask, *, scale):
+    """Absorbed-matmul MLA decode (DeepSeek-V3 trick): never expand k/v.
+
+    q_nope: (B,1,H,dn)  q_rope: (B,1,H,dr)  c_kv: (B,S,r)  k_rope: (B,S,dr)
+    wk: (H,dn,r) k-expansion  wv: (H,r,dv) v-expansion.  Returns (B,1,H,dv).
+    """
+    ql = jnp.einsum("bqhn,hnr->bqhr", q_nope.astype(jnp.float32),
+                    wk.astype(jnp.float32))
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", ql, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", p, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bqhr,hrv->bqhv", o_lat, wv.astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise softmax cross-entropy over a large vocab
+# ---------------------------------------------------------------------------
+
+def softmax_xent(x, w_unembed, labels, *, z_loss_weight=0.0):
+    """x: (T,d)  w_unembed: (d,V)  labels: (T,) int32.
+
+    Returns (ce (T,), z_loss (T,)) in fp32 without keeping (T,V) fp32 logits
+    live (the Pallas kernel streams vocab blocks through VMEM).
+    """
+    logits = (x.astype(jnp.float32) @ w_unembed.astype(jnp.float32))
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = lse - ll
+    zl = z_loss_weight * lse ** 2 if z_loss_weight else jnp.zeros_like(ce)
+    return ce, zl
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan_inline(x, dt, A, B, C, *, chunk, D=None, h0=None):
+    """SSD with the entering-state contribution computed INSIDE the chunk
+    scan (what the Pallas kernel does): the (nc, b, h, p, n) stacked-states
+    buffer never round-trips through HBM.  Same math as :func:`ssd_scan`
+    (§Perf mamba2 hillclimb — identical outputs, lower memory traffic)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bh.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    Cc = Ch.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(state, inp):
+        xk, dtk, Bk, Ck = inp                          # (b, c, h, ...)
+        dA = dtk * Af
+        cum = jnp.cumsum(dA, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", Ck, Bk) * L
+        y = jnp.einsum("bijh,bjh,bjhp->bihp", scores, dtk, xk)
+        y += jnp.einsum("bchn,bhpn,bch->bchp", Ck, state, jnp.exp(cum))
+        dec = jnp.exp(cum[:, -1:, :] - cum)
+        upd = jnp.einsum("bch,bch,bchn,bchp->bhpn", dtk, dec, Bk, xk)
+        state = state * jnp.exp(cum[:, -1, :])[..., None, None] + upd
+        return state, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        body, init,
+        (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, p)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] \
+            * x.astype(jnp.float32)
+    return y.astype(x.dtype), final
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk, D=None, h0=None):
+    """State-space-duality forward (Mamba-2, arXiv:2405.21060 Alg 1).
+
+    x:  (b, l, h, p)  inputs per head
+    dt: (b, l, h)     softplus'd step sizes (>=0)
+    A:  (h,)          negative decay rates (A < 0)
+    B:  (b, l, g, n)  input projections (g groups broadcast over heads)
+    C:  (b, l, g, n)  output projections
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)                  # (b,l,h,n)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bh.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    Cc = Ch.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+
+    dA = dtc * A.astype(jnp.float32)                 # (b,nc,c,h) log-decay <= 0
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumulative
+
+    # --- intra-chunk (quadratic in `chunk`, MXU-shaped) -------------------
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,ci,cj,h)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bzihn,bzjhn->bzijh", Cc, Bc) * L
+    y_diag = jnp.einsum("bzijh,bzjh,bzjhp->bzihp", scores, dtc, xc)
+
+    # --- chunk states + inter-chunk recurrence ----------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,c,h)
+    states = jnp.einsum("bzch,bzch,bzchn,bzchp->bzhpn",
+                        dtc, decay_to_end, Bc, xc)        # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (b,nc,h)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_chunk, dec = inp
+        s_new = s_prev * dec[..., None, None] + s_chunk
+        return s_new, s_prev
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,nc,h,p,n)
+
+    # --- contribution of entering state to each position ------------------
+    state_decay = jnp.exp(cum)                            # (b,nc,c,h)
+    y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, B, C, *, D=None):
+    """One-token SSD update. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B,C: (b,g,n). Returns (y (b,h,p), new_state)."""
+    b, h, p = x.shape
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))             # (b,h)
+    new = state * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dtf, xf, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), new

@@ -1,0 +1,104 @@
+"""Blockwise softmax cross-entropy over a huge vocab (129k-256k).
+
+The (T, V) fp32 logits never exist in HBM: vocab blocks of the unembedding
+stream through VMEM, the kernel keeps running (max, sumexp, label-logit)
+per token row, and emits ce/z-loss at the last vocab block.  This is the
+fused [hidden @ unembed + online-logsumexp + label gather] the roofline
+analysis identifies as the CE bottleneck at 256k vocab (EXPERIMENTS.md
+§Perf).  Forward kernel; backward uses the jnp formulation (dlogits =
+(softmax - onehot) recomputed blockwise by XLA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BLOCK_T = 128
+BLOCK_V = 512
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, w_ref, lbl_ref, ce_ref, zl_ref,
+            m_scr, s_scr, ll_scr, *, bv, nv, z_loss_weight):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        ll_scr[...] = jnp.zeros_like(ll_scr)
+
+    x = x_ref[...].astype(jnp.float32)                  # (bt, d)
+    w = w_ref[...].astype(jnp.float32)                  # (d, bv)
+    logits = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())))
+    lbl = lbl_ref[...]                                  # (bt,)
+    vstart = iv * bv
+    cols = vstart + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    hit = cols == lbl[:, None]
+    ll_scr[...] += jnp.sum(jnp.where(hit, logits, 0.0), axis=1)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    s_scr[...] = s_scr[...] * jnp.exp(m_prev - m_new) + jnp.exp(
+        logits - m_new[:, None]).sum(axis=1)
+    m_scr[...] = m_new
+
+    @pl.when(iv == nv - 1)
+    def _done():
+        lse = m_scr[...] + jnp.log(s_scr[...])
+        ce_ref[...] = (lse - ll_scr[...]).astype(ce_ref.dtype)
+        zl_ref[...] = (z_loss_weight * lse * lse).astype(zl_ref.dtype)
+
+
+def _xent_fwd_kernel(x, w, labels, z_loss_weight, interpret):
+    T, d = x.shape
+    V = w.shape[1]
+    bt = min(BLOCK_T, T)
+    bv = min(BLOCK_V, V)
+    assert T % bt == 0 and V % bv == 0, (T, V, bt, bv)
+    nv = V // bv
+    ce, zl = pl.pallas_call(
+        functools.partial(_kernel, bv=bv, nv=nv,
+                          z_loss_weight=z_loss_weight),
+        grid=(T // bt, nv),
+        in_specs=[pl.BlockSpec((bt, d), lambda it, iv: (it, 0)),
+                  pl.BlockSpec((d, bv), lambda it, iv: (0, iv)),
+                  pl.BlockSpec((bt,), lambda it, iv: (it,))],
+        out_specs=[pl.BlockSpec((bt,), lambda it, iv: (it,)),
+                   pl.BlockSpec((bt,), lambda it, iv: (it,))],
+        out_shape=[jax.ShapeDtypeStruct((T,), jnp.float32),
+                   jax.ShapeDtypeStruct((T,), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bt,), jnp.float32),
+                        pltpu.VMEM((bt,), jnp.float32),
+                        pltpu.VMEM((bt,), jnp.float32)],
+        interpret=interpret,
+    )(x, w, labels)
+    return ce, zl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def softmax_xent(x, w_unembed, labels, z_loss_weight=0.0, interpret=False):
+    return _xent_fwd_kernel(x, w_unembed, labels, z_loss_weight, interpret)
+
+
+def _fwd(x, w, labels, zlw, interpret):
+    out = _xent_fwd_kernel(x, w, labels, zlw, interpret)
+    return out, (x, w, labels)
+
+
+def _bwd(zlw, interpret, res, g):
+    x, w, labels = res
+    gce, gzl = g
+    from . import ref
+    def f(x, w):
+        ce, zl = ref.softmax_xent(x, w, labels, z_loss_weight=zlw)
+        return (ce * gce).sum() + (zl * gzl).sum()
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    return dx, dw, None
+
+
+softmax_xent.defvjp(_fwd, _bwd)

@@ -1,0 +1,143 @@
+"""Mamba-2 SSD chunked scan as a fused Pallas kernel.
+
+One grid over (batch*heads, chunks) with the chunk axis sequential: the
+(p, n) recurrent state lives in VMEM scratch across chunk steps, so the
+intra-chunk quadratic part (MXU matmuls over (c, c) score tiles), the state
+contribution, and the state update are one kernel — no (nc, b, h, p, n)
+stacked-states round-trip through HBM (the dominant memory-roofline term of
+the jnp path; see EXPERIMENTS.md §Perf mamba2 hillclimb).
+
+Forward kernel; backward falls back to the jnp reference formulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, st_ref,
+            state_scr, *, chunk, nc, has_D):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, :, :].astype(jnp.float32)       # (c, p)
+    dt = dt_ref[0, 0, :].astype(jnp.float32)        # (c,)
+    A = A_ref[0].astype(jnp.float32)                # ()
+    Bm = B_ref[0, 0, :, :].astype(jnp.float32)      # (c, n)
+    Cm = C_ref[0, 0, :, :].astype(jnp.float32)      # (c, n)
+
+    dA = dt * A                                     # (c,) log-decay
+    cum = jnp.cumsum(dA)
+    # intra-chunk
+    seg = cum[:, None] - cum[None, :]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(idx >= jdx, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ()))) * L
+    y = jax.lax.dot_general(scores * dt[None, :], x,
+                            (((1,), (0,)), ((), ())))
+    # entering-state contribution
+    state = state_scr[...]                          # (p, n)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())))
+    if has_D:
+        y += D_ref[0].astype(jnp.float32) * x
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+    # state update: s' = exp(sum dA) * s + sum_j dt_j exp(cum_end - cum_j) B_j x_j
+    decay_to_end = jnp.exp(cum[-1] - cum)           # (c,)
+    upd = jax.lax.dot_general((x * (dt * decay_to_end)[:, None]), Bm,
+                              (((0,), (0,)), ((), ())))   # (p, n)
+    state_scr[...] = state * jnp.exp(cum[-1]) + upd
+
+    @pl.when(ic == nc - 1)
+    def _done():
+        st_ref[0, :, :] = state_scr[...]
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk, D, interpret):
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    nc = l // chunk
+    # layout: (b*h, nc, chunk, ...)
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, nc, chunk, p)
+    dtr = dt.transpose(0, 2, 1).reshape(b * h, nc, chunk)
+    Br = Bh.transpose(0, 2, 1, 3).reshape(b * h, nc, chunk, n)
+    Cr = Ch.transpose(0, 2, 1, 3).reshape(b * h, nc, chunk, n)
+    Ar = jnp.tile(A.astype(jnp.float32), b)
+    has_D = D is not None
+    Dr = (jnp.tile(D.astype(jnp.float32), b) if has_D
+          else jnp.zeros((b * h,), jnp.float32))
+
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, nc=nc, has_D=has_D),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1,), lambda bh, ic: (bh,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1,), lambda bh, ic: (bh,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b * h, nc, chunk, p), x.dtype),
+                   jax.ShapeDtypeStruct((b * h, p, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, Ar, Br, Cr, Dr)
+    y = y.reshape(b, h, l, p).transpose(0, 2, 1, 3)
+    st = st.reshape(b, h, p, n)
+    return y, st
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _ssd(x, dt, A, B, C, chunk, has_D, interpret, D):
+    # D passed positionally last so it is differentiable when present
+    y, st = _ssd_fwd(x, dt, A, B, C, chunk, D if has_D else None, interpret)
+    return y, st
+
+
+def _ssd_f(x, dt, A, B, C, chunk, has_D, interpret, D):
+    y, st = _ssd_fwd(x, dt, A, B, C, chunk, D if has_D else None, interpret)
+    return (y, st), (x, dt, A, B, C, D)
+
+
+def _ssd_b(chunk, has_D, interpret, res, g):
+    x, dt, A, B, C, D = res
+    gy, gst = g
+    from . import ref
+
+    def f(x, dt, A, B, C, D):
+        y, st = ref.ssd_scan(x, dt, A, B, C, chunk=chunk,
+                             D=D if has_D else None)
+        return (y.astype(jnp.float32) * gy.astype(jnp.float32)).sum() \
+            + (st * gst).sum()
+    grads = jax.grad(f, argnums=(0, 1, 2, 3, 4, 5))(x, dt, A, B, C, D)
+    return grads
+
+
+_ssd.defvjp(_ssd_f, _ssd_b)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk, D=None, h0=None, interpret=False):
+    """Drop-in for kernels.ref.ssd_scan (h0 not supported by the kernel —
+    falls back to the reference when a carry-in state is given)."""
+    if h0 is not None or x.shape[1] % chunk != 0:
+        from . import ref
+        return ref.ssd_scan(x, dt, A, B, C, chunk=chunk, D=D, h0=h0)
+    has_D = D is not None
+    Dp = D if has_D else jnp.zeros((x.shape[2],), jnp.float32)
+    return _ssd(x, dt, A, B, C, chunk, has_D, interpret, Dp)

@@ -1,0 +1,315 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline terms from the compiled artifact.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``): the
+first two lines below pin 512 virtual host devices BEFORE jax initializes.
+Do NOT import this module from processes that need the real device count.
+
+Per cell this produces a JSON record with:
+  - memory_analysis (bytes per device: args/outputs/temps/peak)
+  - cost_analysis   (per-device HLO FLOPs + bytes accessed)
+  - per-op collective bytes parsed from the post-SPMD HLO text
+  - the three roofline terms (seconds) for TPU v5e:
+        compute    = flops_dev / 197e12
+        memory     = bytes_dev / 819e9
+        collective = coll_bytes_dev / 50e9   (ICI; DCN for the pod axis)
+  - MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and the
+    useful-compute ratio MODEL_FLOPS / (flops_dev * chips).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config                    # noqa: E402
+from repro.distributed.sharding import (make_rules,            # noqa: E402
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.launch import steps as steps_mod                    # noqa: E402
+from repro.models import LM, SHAPES, count_params, shape_applicable  # noqa: E402
+from repro.models.common import sharding_ctx                   # noqa: E402
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<out>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved through links, by op kind.  Proxy: ring
+    algorithms move ~max(in, out) bytes per device (2x for all-reduce)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_b = _shape_bytes(m.group("out"))
+        # first operand(s) inside the call parens
+        args = line[m.end():]
+        in_b = _shape_bytes(args.split("),", 1)[0])
+        b = max(out_b, in_b)
+        if op == "all-reduce":
+            b *= 2
+        out[op] = out.get(op, 0) + b
+        out.setdefault("count", 0)
+        out["count"] += 1
+    return out
+
+
+def _np(x):
+    return float(x) if x is not None else None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             remat: str = "full", hl0_dump: str = None,
+             variants=()) -> dict:
+    """``variants``: §Perf hillclimb knobs —
+      shard_accum : constrain grad accumulators to param shardings
+      no_seqpar   : disable sequence parallelism of the residual stream
+      ssd_inline  : fuse SSD state contribution into the chunk scan
+      cap1.0      : MoE capacity factor 1.25 -> 1.0
+      mb<k>       : override number of microbatches
+      remat_dots  : checkpoint policy 'dots' instead of 'full'
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "variants": list(variants)}
+    if "cap1.0" in variants:
+        cfg = _dc.replace(cfg, moe_capacity_factor=1.0)
+    if "mla_absorbed" in variants:
+        cfg = _dc.replace(cfg, mla_absorbed_decode=True)
+    if "kv_int8" in variants:
+        cfg = _dc.replace(cfg, kv_cache_int8=True)
+    if "remat_dots" in variants:
+        remat = "dots"
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+    if cfg.is_encoder_decoder and shape.kind == "decode" \
+            and shape.name == "long_500k":
+        rec["skipped"] = "enc-dec full attention; long_500k skipped"
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = make_rules(cfg, mesh,
+                       seq_parallel="no_seqpar" not in variants,
+                       sp_scoped="sp_scoped" in variants)
+    t0 = time.time()
+    from repro.kernels import ops as _ops
+    import contextlib
+    ssd_ctx = (_ops.ssd_inline() if "ssd_inline" in variants
+               else contextlib.nullcontext())
+    with sharding_ctx(mesh, rules), ssd_ctx:
+        lm = LM(cfg, remat=remat)
+        if shape.kind == "train":
+            hp = steps_mod.default_hparams(cfg, shape)
+            for v in variants:
+                if v.startswith("mb"):
+                    hp = _dc.replace(hp, num_microbatches=int(v[2:]))
+            if "shard_accum" in variants:
+                hp = _dc.replace(hp, shard_accum=True)
+            rec["hparams"] = dataclass_dict(hp)
+            state = steps_mod.make_train_state(lm, hp, abstract=True)
+            shapes_, spec_ = lm.abstract_params()
+            pshard = param_shardings(spec_, rules, mesh, shapes=shapes_)
+            state["params"] = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                state["params"], pshard)
+            batch = steps_mod.train_input_specs(cfg, shape, mesh, rules)
+            step = steps_mod.make_train_step(
+                lm, hp, total_tokens=shape.global_batch * shape.seq_len,
+                grad_shardings=pshard if hp.shard_accum else None)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6 * count_params(cfg, active_only=True) * tokens
+        elif shape.kind == "prefill":
+            shapes_, spec_ = lm.abstract_params()
+            pshard = param_shardings(spec_, rules, mesh, shapes=shapes_)
+            params = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                shapes_, pshard)
+            batch = steps_mod.train_input_specs(cfg, shape, mesh, rules)
+            batch.pop("labels")
+            step = steps_mod.make_prefill_step(lm)
+            lowered = jax.jit(step).lower(params, batch)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2 * count_params(cfg, active_only=True) * tokens
+        else:  # decode
+            shapes_, spec_ = lm.abstract_params()
+            pshard = param_shardings(spec_, rules, mesh, shapes=shapes_)
+            params = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                shapes_, pshard)
+            specs = steps_mod.serve_input_specs(cfg, shape, lm, mesh, rules)
+            step = steps_mod.make_serve_step(lm)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params, specs["cache"], specs["tokens"], specs["pos"],
+                specs["rng"])
+            model_flops = 2 * count_params(cfg, active_only=True) \
+                * shape.global_batch
+        rec["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        rec[k] = _np(getattr(mem, k, None))
+    cost = compiled.cost_analysis()
+    # raw XLA numbers count each while body ONCE — kept for reference
+    rec["xla_flops_raw"] = float(cost.get("flops", 0.0))
+    rec["xla_bytes_raw"] = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    # trip-count-aware per-device analysis (launch/hlo_cost.py).
+    # score_dims classifies attention-score-shaped tensors: their bytes are
+    # what the flash-attention Pallas kernel keeps out of HBM on TPU (the
+    # CPU dry-run lowers the jnp oracle), reported as memory_s_flashproj.
+    from repro.launch.hlo_cost import analyze_text
+    score_dims = None
+    if shape.kind in ("train", "prefill") and cfg.family != "ssm":
+        s_kv = shape.seq_len
+        seqpar = "no_seqpar" not in variants
+        s_q = shape.seq_len // 16 if seqpar else shape.seq_len
+        score_dims = (s_kv, s_q)
+    ana = analyze_text(text, score_dims=score_dims)
+    flops_dev = ana["flops"]
+    bytes_dev = ana["bytes"]
+    colls = dict(ana["coll"], count=ana["coll_count"])
+    coll_dev = ana["coll_bytes"]
+    rec["score_bytes_per_device"] = ana.get("score_bytes", 0.0)
+    if hl0_dump:
+        with open(hl0_dump, "w") as f:
+            f.write(text)
+    # always persist the HLO (gzip) so analyzer refinements re-run free
+    import gzip
+    hlo_path = os.path.join("benchmarks/results/hlo",
+                            f"{arch}__{shape_name}__{mesh_name}"
+                            + ("__" + "_".join(sorted(variants))
+                               if variants else "") + ".hlo.gz")
+    os.makedirs(os.path.dirname(hlo_path), exist_ok=True)
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(text)
+    rec["hlo_path"] = hlo_path
+
+    rec.update(
+        chips=chips,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collectives=colls,
+        collective_bytes_per_device=coll_dev,
+        model_flops_global=model_flops,
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=coll_dev / ICI_BW,
+    )
+    rec["memory_s_flashproj"] = (bytes_dev - rec["score_bytes_per_device"]) \
+        / HBM_BW
+    terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+             "collective": rec["collective_s"]}
+    rec["dominant"] = max(terms, key=terms.get)
+    denom = flops_dev * chips
+    rec["useful_flops_ratio"] = model_flops / denom if denom else None
+    # roofline fraction: achievable step time is bounded below by each term;
+    # fraction = compute / max(all three) (1.0 == compute-bound at peak)
+    rec["roofline_fraction"] = (rec["compute_s"] / max(terms.values())
+                                if max(terms.values()) > 0 else None)
+    return rec
+
+
+def dataclass_dict(dc):
+    import dataclasses
+    return {f.name: getattr(dc, f.name) for f in dataclasses.fields(dc)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {ARCHS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--hlo-dump", default=None)
+    ap.add_argument("--variant", action="append", default=[],
+                    help="hillclimb knobs; see run_cell docstring")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    vtag = ("__" + "_".join(sorted(args.variant))) if args.variant else ""
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = (f"{arch}__{shape}__"
+                       f"{'2x16x16' if mp else '16x16'}{vtag}")
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, remat=args.remat,
+                                   hl0_dump=args.hlo_dump,
+                                   variants=tuple(args.variant))
+                except Exception as e:   # record failures; they are bugs
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("SKIP " + rec["skipped"] if "skipped" in rec else
+                          "ERROR " + rec.get("error", "")[:120]
+                          if "error" in rec else
+                          f"ok compile={rec.get('compile_s')}s "
+                          f"dominant={rec.get('dominant')}")
+                print(f"[dryrun] {tag}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

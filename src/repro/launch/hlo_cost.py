@@ -1,0 +1,317 @@
+"""Trip-count-aware cost analysis over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each computation once: a
+``lax.scan`` over 61 layers reports the FLOPs/bytes of ONE layer (verified
+in EXPERIMENTS.md §Dry-run methodology).  This analyzer re-walks the HLO
+with loop multipliers taken from each while op's
+``backend_config={"known_trip_count": ...}``, giving the true per-device:
+
+  * flops            — 2*prod(out)*prod(contracting) per dot (MXU work;
+                       elementwise flops are negligible and uncounted)
+  * bytes            — Σ (operand + output bytes) per non-bookkeeping op,
+                       with fusions counted at their call boundary (the
+                       HBM-traffic model roofline wants)
+  * collectives      — per-op-kind link-bytes proxy: max(in, out), 2x for
+                       all-reduce (ring), multiplied through loops.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%(?P<name>[^\s(]+)\s*\(.*\)\s*->.*\{")
+
+
+def _parse_def_line(line: str):
+    """'%name = TYPE op(args), rest' -> dict or None.  Handles tuple types
+    with /*index=N*/ comments and nested layout braces."""
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):                      # tuple type: match paren
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            depth += (ch == "(") - (ch == ")")
+            if depth == 0:
+                break
+        typ, rhs = rhs[:i + 1], rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        typ, rhs = rhs[:sp], rhs[sp + 1:]
+    par = rhs.find("(")
+    if par < 0:
+        return None
+    op = rhs[:par]
+    depth, j = 0, par
+    for j in range(par, len(rhs)):
+        depth += (rhs[j] == "(") - (rhs[j] == ")")
+        if depth == 0:
+            break
+    args = rhs[par + 1:j]
+    rest = rhs[j + 1:]
+    return {"name": name, "type": typ, "op": op, "args": args, "rest": rest,
+            "root": is_root}
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "while", "conditional", "call",
+              "fusion", "iota", "partition-id", "replica-id"}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _type_dims(t: str):
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def parse(text: str) -> Dict[str, list]:
+    comps, cur = {}, None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line else None
+        if m and "->" in line:
+            cur = m.group("name")
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _parse_def_line(line)
+        if om:
+            comps[cur].append(om)
+    return comps
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps = parse(text)
+        self.types = {c: {o["name"]: o["type"] for o in ops}
+                      for c, ops in self.comps.items()}
+        self.roots = {}
+        self.has_dus = {}
+        for c, ops in self.comps.items():
+            root = [o for o in ops if o.get("root")]
+            self.roots[c] = root[0]["op"] if root else (
+                ops[-1]["op"] if ops else "")
+            self.has_dus[c] = any(o["op"] == "dynamic-update-slice"
+                                  for o in ops)
+        self._memo = {}
+        self.score_dims = None       # set via analyze_text(score_dims=...)
+        self.score_bytes = 0.0
+        # per fused computation: param index -> sliced-consumption bytes
+        # (operands consumed ONLY via dynamic-slice inside a fusion touch
+        # just the slice, not the whole buffer — e.g. scan-stacked weights)
+        self._slice_params = {c: self._sliced_params(c) for c in self.comps}
+
+    def _sliced_params(self, comp):
+        ops = self.comps[comp]
+        params = {}
+        for o in ops:
+            if o["op"] == "parameter":
+                params[o["name"]] = {"idx": int(o["args"]), "uses": 0,
+                                     "slice_bytes": 0, "only_slice": True}
+        for o in ops:
+            if o["op"] == "parameter":
+                continue
+            used = [n for n in _NAME_RE.findall(o["args"]) if n in params]
+            for n in used:
+                params[n]["uses"] += 1
+                if o["op"] == "dynamic-slice" and used[0] == n:
+                    params[n]["slice_bytes"] += _type_bytes(o["type"])
+                else:
+                    params[n]["only_slice"] = False
+        out = {}
+        for p in params.values():
+            if p["uses"] and p["only_slice"]:
+                out[p["idx"]] = p["slice_bytes"]
+        return out
+
+    def _operand_bytes(self, comp, args):
+        tb = self.types[comp]
+        total = 0
+        for nm in _NAME_RE.findall(args):
+            t = tb.get(nm)
+            if t:
+                total += _type_bytes(t)
+        return total
+
+    def _max_operand_bytes(self, comp, args):
+        tb = self.types[comp]
+        best = 0
+        for nm in _NAME_RE.findall(args):
+            t = tb.get(nm)
+            if t:
+                best = max(best, _type_bytes(t))
+        return best
+
+    def analyze(self, comp: str):
+        """-> dict(flops, bytes, coll={kind: bytes}, coll_count) for ONE
+        execution of ``comp`` (loops inside already multiplied)."""
+        if comp in self._memo:
+            return self._memo[comp]
+        res = {"flops": 0.0, "bytes": 0.0, "coll": {},
+               "coll_count": 0, "score": 0.0}
+        for o in self.comps.get(comp, ()):
+            op, typ, rest, args = o["op"], o["type"], o["rest"], o["args"]
+            out_b = _type_bytes(typ)
+            if op == "while":
+                m = _TRIP_RE.search(rest)
+                trip = int(m.group(1)) if m else 1
+                body = cond = None
+                bm = re.search(r"body=%([\w\.\-]+)", rest)
+                cm = re.search(r"condition=%([\w\.\-]+)", rest)
+                sub = self.analyze(bm.group(1)) if bm else None
+                subc = self.analyze(cm.group(1)) if cm else None
+                for s in (sub, subc):
+                    if s is None:
+                        continue
+                    res["flops"] += trip * s["flops"]
+                    res["bytes"] += trip * s["bytes"]
+                    res["score"] += trip * s["score"]
+                    res["coll_count"] += trip * s["coll_count"]
+                    for k, v in s["coll"].items():
+                        res["coll"][k] = res["coll"].get(k, 0) + trip * v
+                continue
+            if op in ("call", "conditional"):
+                for cname in re.findall(
+                        r"(?:to_apply|branch_computations=\{)[%]?([\w\.\-]+)",
+                        rest):
+                    s = self.analyze(cname)
+                    for k in ("flops", "bytes", "coll_count", "score"):
+                        res[k] += s[k]
+                    for k, v in s["coll"].items():
+                        res["coll"][k] = res["coll"].get(k, 0) + v
+                continue
+            if op == "fusion":
+                # HBM traffic: call-boundary operands + output, EXCEPT
+                #  - operands consumed only via dynamic-slice inside the
+                #    fusion (scan weight/carry slices): charge slice bytes,
+                #  - dynamic-update-slice roots alias in place: charge the
+                #    written slice, not the buffer.
+                fm = re.search(r"calls=%([\w\.\-]+)", rest)
+                callee = fm.group(1) if fm else None
+                sliced = self._slice_params.get(callee, {})
+                tb = self.types[comp]
+                ob = out_b
+                for i, nm in enumerate(_NAME_RE.findall(args)):
+                    t = tb.get(nm)
+                    if t is None:
+                        continue
+                    ob += sliced[i] if i in sliced else _type_bytes(t)
+                # in-place aliasing: DUS root, or a convert/bitcast-wrapped
+                # DUS whose output is buffer-sized (loop grad accumulators)
+                mx = self._max_operand_bytes(comp, args)
+                if callee and (self.roots.get(callee) ==
+                               "dynamic-update-slice" or
+                               (self.has_dus.get(callee) and out_b == mx)):
+                    ob -= 2 * mx
+                ob = max(ob, 0)
+                if self._is_score(typ):
+                    res["score"] += ob
+                res["bytes"] += ob
+                if callee:
+                    s = self.analyze(callee)
+                    res["flops"] += s["flops"]   # dots inside fusions
+                    res["coll_count"] += s["coll_count"]
+                    for k, v in s["coll"].items():
+                        res["coll"][k] = res["coll"].get(k, 0) + v
+                continue
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                in_b = self._operand_bytes(comp, args)
+                b = max(out_b, in_b)
+                if base == "all-reduce":
+                    b *= 2
+                res["coll"][base] = res["coll"].get(base, 0) + b
+                res["coll_count"] += 1
+                res["bytes"] += out_b + in_b
+                continue
+            if op.endswith("-done"):
+                continue
+            if op == "dot":
+                out_elems = 1
+                for d in _type_dims(typ):
+                    out_elems *= d
+                lhs = _NAME_RE.findall(args)
+                lhs_t = self.types[comp].get(lhs[0], "") if lhs else ""
+                dims = _type_dims(lhs_t)
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                contract = 1
+                if cm and dims:
+                    for i in cm.group(1).split(","):
+                        if i:
+                            contract *= dims[int(i)]
+                res["flops"] += 2.0 * out_elems * contract
+            if op in SKIP_BYTES:
+                continue
+            ob = out_b + self._operand_bytes(comp, args)
+            if op == "dynamic-update-slice":   # in-place aliasing
+                ob -= 2 * self._max_operand_bytes(comp, args)
+            ob = max(ob, 0)
+            if self._is_score(typ):
+                res["score"] += ob
+            res["bytes"] += ob
+        self._memo[comp] = res
+        return res
+
+    def _is_score(self, typ):
+        """Attention-score-shaped tensor: output dims contain BOTH
+        sequence dims (multiset match) — the tensors the flash-attention
+        Pallas kernel keeps out of HBM."""
+        if not self.score_dims:
+            return False
+        dims = _type_dims(typ)
+        need = list(self.score_dims)
+        for d in dims:
+            if d in need:
+                need.remove(d)
+        return not need
+
+    def entry(self):
+        for c in self.comps:
+            if c.startswith("main") or ".main" in c:
+                return c
+        return next(reversed(self.comps))
+
+
+def analyze_text(text: str, score_dims=None) -> dict:
+    a = Analyzer(text)
+    a.score_dims = tuple(score_dims) if score_dims else None
+    res = a.analyze(a.entry())
+    res["coll_bytes"] = sum(res["coll"].values())
+    res["score_bytes"] = res.pop("score", 0.0)
+    return res

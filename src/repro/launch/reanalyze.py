@@ -1,0 +1,69 @@
+"""Re-derive roofline metrics from persisted HLO dumps (no recompile).
+
+``python -m repro.launch.reanalyze`` updates every record in
+benchmarks/results/dryrun/ from its saved .hlo.gz using the current
+launch/hlo_cost.py — analyzer refinements never require recompiling the
+80-cell sweep.
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch.hlo_cost import analyze_text
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def reanalyze(rec_path):
+    rec = json.load(open(rec_path))
+    hlo = rec.get("hlo_path")
+    if not hlo or not os.path.exists(hlo):
+        return False
+    text = gzip.open(hlo, "rt").read()
+    score_dims = None
+    if rec.get("kind") in ("train", "prefill") and \
+            rec.get("score_bytes_per_device") is not None:
+        s_kv = {"train_4k": 4096, "prefill_32k": 32768}.get(rec["shape"])
+        seqpar = "no_seqpar" not in (rec.get("variants") or [])
+        if s_kv:
+            score_dims = (s_kv, s_kv // 16 if seqpar else s_kv)
+    ana = analyze_text(text, score_dims=score_dims)
+    rec.update(
+        flops_per_device=ana["flops"],
+        bytes_per_device=ana["bytes"],
+        collectives=dict(ana["coll"], count=ana["coll_count"]),
+        collective_bytes_per_device=ana["coll_bytes"],
+        score_bytes_per_device=ana.get("score_bytes", 0.0),
+        compute_s=ana["flops"] / PEAK_FLOPS,
+        memory_s=ana["bytes"] / HBM_BW,
+        collective_s=ana["coll_bytes"] / ICI_BW,
+    )
+    rec["memory_s_flashproj"] = (ana["bytes"]
+                                 - ana.get("score_bytes", 0.0)) / HBM_BW
+    terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+             "collective": rec["collective_s"]}
+    rec["dominant"] = max(terms, key=terms.get)
+    denom = ana["flops"] * rec["chips"]
+    rec["useful_flops_ratio"] = (rec["model_flops_global"] / denom
+                                 if denom else None)
+    rec["roofline_fraction"] = (rec["compute_s"] / max(terms.values())
+                                if max(terms.values()) > 0 else None)
+    json.dump(rec, open(rec_path, "w"), indent=1)
+    return True
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/results/dryrun"
+    n = 0
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if reanalyze(f):
+            n += 1
+    print(f"re-analyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

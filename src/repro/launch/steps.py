@@ -1,0 +1,273 @@
+"""Step builders: train_step (MAP on the log-joint, microbatched, mixed
+precision), prefill_step, serve_step — plus ShapeDtypeStruct input specs for
+the multi-pod dry-run (no allocation).
+
+The paper's machinery is in the hot path: the log-prior flows through the
+handler stack (core.bayes.log_prior) and serve_step draws the next token
+through a `sample` primitive — Fig. 1's predictive pattern, sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.core import bayes, dist
+from repro.core.primitives import sample
+from repro.models import LM, ModelConfig, ShapeConfig
+from repro.models.config import SHAPES
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    optimizer: str = "adamw"        # adamw | adamw-bf16 | adafactor
+    num_microbatches: int = 1
+    accum_dtype: str = "float32"
+    clip_norm: float = 1.0
+    prior_sigma: float = 10.0       # MAP prior (≈ decoupled weight decay)
+    bias_update_rate: float = 1e-3  # DeepSeek aux-free router-bias step
+    shard_accum: bool = False       # constrain grad accumulators to the
+    #                                 param sharding (§Perf: forces GSPMD to
+    #                                 reduce-scatter per microbatch instead
+    #                                 of replicate+all-reduce)
+
+
+def default_hparams(cfg: ModelConfig, shape: Optional[ShapeConfig] = None
+                    ) -> TrainHParams:
+    """Per-arch memory-aware defaults (EXPERIMENTS.md §Dry-run)."""
+    n = cfg.num_layers * cfg.d_model  # cheap size proxy
+    big = cfg.name.split("-")[0] in ("deepseek", "kimi", "llama3")
+    mid = cfg.name.split("-")[0] in ("jamba", "qwen1.5", "pixtral")
+    mb = 1
+    if shape is not None and shape.kind == "train":
+        if big:
+            mb = 16
+        elif mid:
+            mb = 8
+        elif shape.global_batch >= 256:
+            mb = 4
+    return TrainHParams(
+        optimizer=("adafactor" if big else
+                   "adamw-bf16" if mid else "adamw"),
+        num_microbatches=mb,
+        accum_dtype="bfloat16" if big else "float32",
+    )
+
+
+def make_optimizer(hp: TrainHParams):
+    sched = optim.warmup_cosine(hp.learning_rate, hp.warmup_steps,
+                                hp.total_steps)
+    # weight decay is 0: regularization comes from the MAP prior (the
+    # handler-scored log p(w) in the loss) — no double counting.
+    if hp.optimizer == "adafactor":
+        base = optim.adafactor(hp.learning_rate)
+    elif hp.optimizer == "adamw-bf16":
+        base = optim.adamw(hp.learning_rate, weight_decay=0.0, schedule=sched,
+                           mu_dtype=jnp.bfloat16, nu_dtype=jnp.bfloat16)
+    else:
+        base = optim.adamw(hp.learning_rate, weight_decay=0.0, schedule=sched)
+    return optim.chain(optim.clip_by_global_norm(hp.clip_norm), base)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(lm: LM, hp: TrainHParams, total_tokens: int,
+                    grad_shardings=None):
+    cfg = lm.cfg
+    opt = make_optimizer(hp)
+    accum_dtype = jnp.dtype(hp.accum_dtype)
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda a, s: jax.lax.with_sharding_constraint(a, s),
+            g, grad_shardings)
+
+    def loss_fn(w, mb):
+        loss, metrics = lm.forward(w, mb)
+        # MAP: the Normal prior over weights, scored through the handler
+        # stack (paper Table 1 machinery inside pjit). Elementwise — no
+        # extra matmul FLOPs.
+        lp = bayes.log_prior(w, hp.prior_sigma)
+        loss = loss - lp / total_tokens
+        metrics = dict(metrics, log_prior=lp)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        w = state["params"]
+        n_mb = hp.num_microbatches
+
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(w, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((n_mb, a.shape[0] // n_mb) + a.shape[1:]),
+                batch)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(w, mb)
+                m = dict(m, loss=l)
+                g = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), acc[0], g)
+                g = _constrain_grads(g)
+                m = jax.tree.map(lambda a, b: a + b / n_mb, acc[1], m)
+                return (g, m), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), w)
+            g0 = _constrain_grads(g0)
+            m0 = jax.eval_shape(
+                lambda mb: dict(grad_fn(w, mb)[0][1], loss=jnp.zeros(())),
+                jax.tree.map(lambda a: a[0], mbs))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics), _ = jax.lax.scan(body, (g0, m0), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = metrics["loss"]
+
+        updates, opt_state = opt.update(grads, state["opt"], w)
+        w = optim.apply_updates(w, updates)
+        w = _router_bias_update(cfg, w, metrics, hp.bias_update_rate)
+        metrics = {k: v for k, v in metrics.items() if k != "moe_load"}
+        return {"params": w, "opt": opt_state,
+                "step": state["step"] + 1}, dict(metrics, loss=loss)
+
+    return train_step
+
+
+def _router_bias_update(cfg, w, metrics, rate):
+    """DeepSeek-V3 aux-free load balancing: nudge the (non-gradient) router
+    bias against the observed per-expert load."""
+    if cfg.router_type != "sigmoid" or "moe_load" not in metrics:
+        return w
+    load = metrics["moe_load"].get("moe")          # (n_layers, E_pad)
+    if load is None:
+        return w
+    e = cfg.num_experts
+    e_pad = load.shape[-1]
+    real = (jnp.arange(e_pad) < e)
+    err = load - jnp.where(real, 1.0 / e, 0.0)
+    delta = -rate * jnp.sign(err) * real
+    bias = w["moe"]["p0"]["ffn"]["router_bias"]
+    w = dict(w)
+    moe = dict(w["moe"])
+    p0 = dict(moe["p0"])
+    ffn = dict(p0["ffn"])
+    ffn["router_bias"] = bias + delta.astype(bias.dtype)
+    p0["ffn"] = ffn
+    moe["p0"] = p0
+    w["moe"] = moe
+    return w
+
+
+def make_train_state(lm: LM, hp: TrainHParams, rng_key=None, abstract=False):
+    opt = make_optimizer(hp)
+    if abstract:
+        shapes, _ = lm.abstract_params()
+        opt_state = jax.eval_shape(opt.init, shapes)
+        return {"params": shapes, "opt": opt_state,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    w = lm.init(rng_key)
+    return {"params": w, "opt": opt.init(w),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(lm: LM):
+    def prefill_step(w, batch):
+        return lm.forward(w, batch, return_logits="last")
+    return prefill_step
+
+
+def make_serve_step(lm: LM, temperature: float = 1.0):
+    def serve_step(w, cache, tokens, pos, rng):
+        logits, cache = lm.decode_step(w, tokens, cache, pos)
+        # the paper's predictive pattern: next token via a `sample` site
+        nxt = sample("next_token",
+                     dist.Categorical(logits=logits / temperature),
+                     rng_key=rng)
+        return nxt[:, None].astype(jnp.int32), cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _dp_axes(rules, batch_size, mesh):
+    dp = rules.get("batch") or ()
+    dp = (dp,) if isinstance(dp, str) else tuple(dp)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if (size and batch_size % size == 0) else ()
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_axes(rules, B, mesh)
+    tok = _sds((B, S), jnp.int32, mesh, P(dp or None))
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.is_encoder_decoder:
+        # encoder consumes the shape's seq_len of (stub) frames; targets S//4
+        Sd = max(S // 4, 16)
+        t = _sds((B, Sd), jnp.int32, mesh, P(dp or None))
+        batch = {"tokens": t, "labels": t,
+                 "src_embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                    P(dp or None, "model", None))}
+    elif cfg.frontend == "vision":
+        batch["patch_embeds"] = _sds(
+            (B, cfg.frontend_len, cfg.d_model), jnp.bfloat16, mesh,
+            P(dp or None, None, None))
+    return batch
+
+
+def _cache_spec_tree(cfg, lm, batch, seq_len, enc_len, mesh, rules):
+    dp = _dp_axes(rules, batch, mesh)
+    dpa = tuple(dp) or None
+    shapes = jax.eval_shape(lambda: lm.init_cache(batch, seq_len,
+                                                  enc_len=enc_len))
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "ssm" in keys and "conv" not in keys:
+            return P(None, dpa, "model")          # (L, B, h, p, n)
+        if "conv" in keys:
+            return P(None, dpa, None, "model")    # (L, B, w-1, ch)
+        # kv / cross / mla latents: sequence dim sharded (flash-decoding)
+        return P(None, dpa, "model")
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    specs = [ _sds(l.shape, l.dtype, mesh, spec_for(p, l)) for p, l in flat ]
+    treedef = jax.tree_util.tree_structure(shapes)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig, lm: LM, mesh,
+                      rules):
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_axes(rules, B, mesh)
+    enc_len = S if cfg.is_encoder_decoder else 0
+    cache = _cache_spec_tree(cfg, lm, B, S, enc_len, mesh, rules)
+    tokens = _sds((B, 1), jnp.int32, mesh, P(tuple(dp) or None, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return {"cache": cache, "tokens": tokens, "pos": pos, "rng": rng}

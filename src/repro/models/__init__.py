@@ -1,0 +1,5 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, reduced, shape_applicable
+from .zoo import LM, count_params, layer_groups
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "reduced",
+           "shape_applicable", "LM", "count_params", "layer_groups"]

@@ -1,0 +1,344 @@
+"""Attention layers: GQA/MQA/MHA and MLA (multi-head latent attention).
+
+Each flavour provides
+  - ``*_params(cfg, stacked)``   — declare weights via ``param`` effect sites
+                                   (stacked leading layer dim for scan).
+  - ``*_apply(cfg, w, x, ...)``  — full-sequence causal forward (train/prefill).
+  - ``*_decode(cfg, w, x, cache, pos)`` — single-token decode with KV cache.
+
+All math routes through :mod:`repro.kernels.ops` so the TPU Pallas kernels and
+the pure-jnp references share one call site.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.primitives import param
+from repro.kernels import ops
+from repro.models.common import apply_rope, normal_init, rope_frequencies, zeros_init
+from repro.models.config import ModelConfig
+
+
+def _p(name, shape, sharding, dtype, init=None):
+    return param(name, shape=shape, init_fn=init or normal_init(0.02),
+                 dtype=dtype, sharding=sharding)
+
+
+def _stk(stacked, shape, sharding):
+    """Prepend the layer-stack dim to shape/sharding when stacked > 0."""
+    if stacked:
+        return (stacked,) + shape, ("layers",) + sharding
+    return shape, sharding
+
+
+# ---------------------------------------------------------------------------
+# GQA (covers MHA: kv == heads; MQA: kv == 1)
+# ---------------------------------------------------------------------------
+
+def gqa_params(cfg: ModelConfig, prefix: str, stacked: int = 0):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.jnp_dtype
+    w = {}
+    shape, shard = _stk(stacked, (d, H * hd), ("embed", "heads"))
+    w["wq"] = _p(f"{prefix}.wq", shape, shard, dt)
+    shape, shard = _stk(stacked, (d, K * hd), ("embed", "kv"))
+    w["wk"] = _p(f"{prefix}.wk", shape, shard, dt)
+    w["wv"] = _p(f"{prefix}.wv", shape, shard, dt)
+    shape, shard = _stk(stacked, (H * hd, d), ("heads", "embed"))
+    w["wo"] = _p(f"{prefix}.wo", shape, shard, dt)
+    if cfg.qkv_bias:
+        for n, dim in (("bq", H * hd), ("bk", K * hd), ("bv", K * hd)):
+            shape, shard = _stk(stacked, (dim,), ("heads",))
+            w[n] = _p(f"{prefix}.{n}", shape, shard, dt, init=zeros_init())
+    if cfg.qk_norm:
+        shape, shard = _stk(stacked, (hd,), (None,))
+        w["q_norm"] = _p(f"{prefix}.q_norm", shape, shard, jnp.float32,
+                         init=lambda k, s, t: jnp.ones(s, t))
+        w["k_norm"] = _p(f"{prefix}.k_norm", shape, shard, jnp.float32,
+                         init=lambda k, s, t: jnp.ones(s, t))
+    return w
+
+
+def _qkv(cfg: ModelConfig, w, x):
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, w["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, w["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, w["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + w["bq"].astype(q.dtype)
+        k = k + w["bk"].astype(k.dtype)
+        v = v + w["bv"].astype(v.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = ops.rmsnorm(q, w["q_norm"])
+        k = ops.rmsnorm(k, w["k_norm"])
+    return q, k, v
+
+
+def gqa_apply(cfg: ModelConfig, w, x, rope, positions=None, causal=True):
+    """Full-sequence attention.  x: (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(cfg, w, x)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin, positions)
+    k = apply_rope(k, cos, sin, positions)
+    out = ops.attention(q, k, v, causal=causal)        # (B, S, H, hd)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, w["wo"].astype(out.dtype))
+
+
+def gqa_init_cache(cfg: ModelConfig, batch, seq_len, dtype):
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.kv_cache_int8:
+        return {
+            "k": jnp.zeros((batch, seq_len, K, hd), jnp.int8),
+            "v": jnp.zeros((batch, seq_len, K, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, seq_len, K, 1), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, seq_len, K, 1), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, seq_len, K, hd), dtype),
+        "v": jnp.zeros((batch, seq_len, K, hd), dtype),
+    }
+
+
+def _quantize_kv(x):
+    """(B, 1, K, hd) -> int8 payload + per-(b, pos, head) bf16 scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def gqa_decode(cfg: ModelConfig, w, x, cache, pos, rope):
+    """x: (B, 1, d); cache k/v: (B, S, K, hd); pos: scalar write index.
+    ``rope`` is the (cos, sin) pair evaluated AT pos (common.rope_at)."""
+    B = x.shape[0]
+    q, k, v = _qkv(cfg, w, x)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin, None)
+    k = apply_rope(k, cos, sin, None)
+    if cfg.kv_cache_int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                              (0, pos, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                              (0, pos, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, pos, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, pos, 0, 0)),
+        }
+        ck = (new["k"].astype(jnp.bfloat16) * new["k_scale"]).astype(x.dtype)
+        cv = (new["v"].astype(jnp.bfloat16) * new["v_scale"]).astype(x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new = {"k": ck, "v": cv}
+    S = ck.shape[1]
+    mask = (jnp.arange(S) <= pos)[None, :]              # (1, S)
+    out = ops.decode_attention(q, ck, cv, mask)         # (B, 1, H, hd)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    y = jnp.einsum("bsh,hd->bsd", out, w["wo"].astype(out.dtype))
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v3 / kimi-k2)
+#
+# q is (optionally) low-rank: x -> q_lora -> heads*(nope+rope)
+# k/v share a compressed latent: x -> (kv_lora | k_rope);
+#   k_nope, v expand from kv_lora per head; k_rope is shared across heads.
+# The decode cache stores ONLY the (kv_lora + rope) latent per position.
+# ---------------------------------------------------------------------------
+
+def mla_params(cfg: ModelConfig, prefix: str, stacked: int = 0):
+    d, H = cfg.d_model, cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.jnp_dtype
+    w = {}
+    if r_q:
+        shape, shard = _stk(stacked, (d, r_q), ("embed", None))
+        w["wq_a"] = _p(f"{prefix}.wq_a", shape, shard, dt)
+        shape, shard = _stk(stacked, (r_q,), (None,))
+        w["q_a_norm"] = _p(f"{prefix}.q_a_norm", shape, shard, jnp.float32,
+                           init=lambda k, s, t: jnp.ones(s, t))
+        shape, shard = _stk(stacked, (r_q, H * (dn + dr)), (None, "heads"))
+        w["wq_b"] = _p(f"{prefix}.wq_b", shape, shard, dt)
+    else:
+        shape, shard = _stk(stacked, (d, H * (dn + dr)), ("embed", "heads"))
+        w["wq"] = _p(f"{prefix}.wq", shape, shard, dt)
+    shape, shard = _stk(stacked, (d, r_kv + dr), ("embed", None))
+    w["wkv_a"] = _p(f"{prefix}.wkv_a", shape, shard, dt)
+    shape, shard = _stk(stacked, (r_kv,), (None,))
+    w["kv_a_norm"] = _p(f"{prefix}.kv_a_norm", shape, shard, jnp.float32,
+                        init=lambda k, s, t: jnp.ones(s, t))
+    shape, shard = _stk(stacked, (r_kv, H * (dn + dv)), (None, "heads"))
+    w["wkv_b"] = _p(f"{prefix}.wkv_b", shape, shard, dt)
+    shape, shard = _stk(stacked, (H * dv, d), ("heads", "embed"))
+    w["wo"] = _p(f"{prefix}.wo", shape, shard, dt)
+    return w
+
+
+def _mla_q(cfg: ModelConfig, w, x):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", x, w["wq_a"].astype(x.dtype))
+        qa = ops.rmsnorm(qa, w["q_a_norm"])
+        q = jnp.einsum("bsr,rh->bsh", qa, w["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, w["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def _mla_kv_latent(cfg: ModelConfig, w, x):
+    """Compressed latent (B, S, r_kv) and shared rope key (B, S, dr)."""
+    kv = jnp.einsum("bsd,dr->bsr", x, w["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = ops.rmsnorm(c_kv, w["kv_a_norm"])
+    return c_kv, k_rope
+
+
+def _mla_expand_kv(cfg: ModelConfig, w, c_kv):
+    B, S, _ = c_kv.shape
+    H = cfg.num_heads
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    kv = jnp.einsum("bsr,rh->bsh", c_kv, w["wkv_b"].astype(c_kv.dtype))
+    kv = kv.reshape(B, S, H, dn + dv)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_apply(cfg: ModelConfig, w, x, rope, positions=None):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dr = cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(cfg, w, x)
+    c_kv, k_rope = _mla_kv_latent(cfg, w, x)
+    k_nope, v = _mla_expand_kv(cfg, w, c_kv)
+    cos, sin = rope
+    q_rope = apply_rope(q_rope, cos, sin, positions)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin, positions)  # 1 shared head
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    out = ops.attention(q, k, v, causal=True)
+    out = out.reshape(B, S, H * cfg.v_head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, w["wo"].astype(out.dtype))
+
+
+def mla_init_cache(cfg: ModelConfig, batch, seq_len, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode_absorbed(cfg: ModelConfig, w, x, cache, pos, rope):
+    """DeepSeek-V3 absorbed-matmul decode: q_nope is projected INTO the
+    latent space (through the k-expansion) and attention runs against the
+    compressed cache directly — the (B,S,H,dn) expanded keys/values never
+    exist.  FLOPs per token drop from O(S·r·H·(dn+dv)) (re-expansion) to
+    O(S·H·r) (latent scores); see EXPERIMENTS.md §Perf cell 4."""
+    B = x.shape[0]
+    H, dr = cfg.num_heads, cfg.qk_rope_head_dim
+    dn, dv, r = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(cfg, w, x)
+    c_kv_new, k_rope_new = _mla_kv_latent(cfg, w, x)
+    cos, sin = rope
+    q_rope = apply_rope(q_rope, cos, sin, None)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin,
+                            None)[:, :, 0]
+    c = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, pos, 0))
+    S = c.shape[1]
+    # split the kv expansion into absorbed k / v halves: (r, H, dn|dv)
+    wkv_b = w["wkv_b"].reshape(r, H, dn + dv)
+    wk = wkv_b[..., :dn].transpose(1, 2, 0)            # (H, dn, r)
+    wv = wkv_b[..., dn:].transpose(1, 0, 2)            # (H, r, dv)
+    mask = (jnp.arange(S) <= pos)[None, :]
+    scale = (dn + dr) ** -0.5
+    out = ops.mla_absorbed_decode(q_nope, q_rope, c.astype(x.dtype),
+                                  kr.astype(x.dtype), wk, wv, mask,
+                                  scale=scale)
+    out = out.reshape(B, 1, H * dv)
+    y = jnp.einsum("bsh,hd->bsd", out, w["wo"].astype(out.dtype))
+    return y, {"c_kv": c, "k_rope": kr}
+
+
+def mla_decode(cfg: ModelConfig, w, x, cache, pos, rope):
+    """Latent-cache decode: expands k/v from the compressed latent.
+
+    Cache is (B, S, r_kv + dr) — ~an order of magnitude smaller than a GQA
+    cache, which is the point of MLA.
+    """
+    if cfg.mla_absorbed_decode:
+        return mla_decode_absorbed(cfg, w, x, cache, pos, rope)
+    B = x.shape[0]
+    H, dr = cfg.num_heads, cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(cfg, w, x)
+    c_kv_new, k_rope_new = _mla_kv_latent(cfg, w, x)
+    cos, sin = rope
+    q_rope = apply_rope(q_rope, cos, sin, None)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin,
+                            None)[:, :, 0]
+    c = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    S = c.shape[1]
+    k_nope, v = _mla_expand_kv(cfg, w, c.astype(x.dtype))
+    k = jnp.concatenate([
+        k_nope, jnp.broadcast_to(kr.astype(x.dtype)[:, :, None, :],
+                                 (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = (jnp.arange(S) <= pos)[None, :]
+    out = ops.decode_attention(q, k, v, mask)
+    out = out.reshape(B, 1, H * cfg.v_head_dim)
+    y = jnp.einsum("bsh,hd->bsd", out, w["wo"].astype(out.dtype))
+    return y, {"c_kv": c, "k_rope": kr}
+
+
+# ---------------------------------------------------------------------------
+# dispatch table
+# ---------------------------------------------------------------------------
+
+def attn_params(cfg: ModelConfig, prefix: str, stacked: int = 0):
+    if cfg.attn_type == "mla":
+        return mla_params(cfg, prefix, stacked)
+    return gqa_params(cfg, prefix, stacked)
+
+
+def attn_apply(cfg: ModelConfig, w, x, rope, positions=None):
+    if cfg.attn_type == "mla":
+        return mla_apply(cfg, w, x, rope, positions)
+    return gqa_apply(cfg, w, x, rope, positions)
+
+
+def attn_init_cache(cfg: ModelConfig, batch, seq_len, dtype):
+    if cfg.attn_type == "mla":
+        return mla_init_cache(cfg, batch, seq_len, dtype)
+    return gqa_init_cache(cfg, batch, seq_len, dtype)
+
+
+def attn_decode(cfg: ModelConfig, w, x, cache, pos, rope):
+    if cfg.attn_type == "mla":
+        return mla_decode(cfg, w, x, cache, pos, rope)
+    return gqa_decode(cfg, w, x, cache, pos, rope)

@@ -1,0 +1,235 @@
+"""Shared model building blocks.
+
+Weights are declared through the paper's ``param`` effect primitive, carrying
+*logical* sharding names as metadata.  The distributed runtime maps logical
+names to mesh axes (see ``repro.distributed.sharding``); on a single device
+the metadata is inert.  This is the paper's thesis applied at LLM scale:
+the same effectful model code runs under ``seed``/``trace`` for init, under
+``substitute`` for apply, and inside ``pjit`` for the production mesh —
+handlers are transparent to the tracer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.primitives import param
+
+# ---------------------------------------------------------------------------
+# logical sharding context
+# ---------------------------------------------------------------------------
+
+_SHARDING_CTX = {"mesh": None, "rules": None}
+
+
+@contextmanager
+def sharding_ctx(mesh, rules):
+    old = dict(_SHARDING_CTX)
+    _SHARDING_CTX.update(mesh=mesh, rules=rules)
+    try:
+        yield
+    finally:
+        _SHARDING_CTX.update(old)
+
+
+def logical_to_spec(names: Optional[Sequence[Optional[str]]]):
+    """Map logical axis names to a PartitionSpec under the active rules.
+    A name ABSENT from the rules dict disables the whole constraint
+    (layout left to GSPMD) — distinct from a name mapped to None, which
+    constrains that dim to be replicated."""
+    from jax.sharding import PartitionSpec as P
+    rules = _SHARDING_CTX["rules"]
+    if names is None or rules is None:
+        return None
+    if any(n is not None and n not in rules for n in names):
+        return None
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def constrain(x, names: Optional[Sequence[Optional[str]]]):
+    """with_sharding_constraint by logical names; no-op off-mesh."""
+    mesh = _SHARDING_CTX["mesh"]
+    spec = logical_to_spec(names)
+    if mesh is None or spec is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh():
+    return _SHARDING_CTX["mesh"]
+
+
+def current_rules():
+    return _SHARDING_CTX["rules"]
+
+
+def constrain_spec(x, spec):
+    """with_sharding_constraint with an explicit PartitionSpec."""
+    mesh = _SHARDING_CTX["mesh"]
+    if mesh is None or spec is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+    return init
+
+
+def zeros_init():
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+    return init
+
+
+def fan_in_init():
+    def init(key, shape, dtype):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# primitive layers (functional, weights via `param` sites)
+# ---------------------------------------------------------------------------
+
+def dense(name, x, out_dim, *, axes=("embed", "mlp"), use_bias=False,
+          dtype=jnp.bfloat16, stacked: int = 0, w=None, b=None):
+    """y = x @ W (+ b). ``axes`` are logical names for W's dims.
+
+    ``stacked``: leading layer-stack dim L for scan-over-layers weights;
+    when >0 the caller passes sliced weights via ``w``/``b`` inside the scan
+    body and this function only does the math.
+    """
+    in_dim = x.shape[-1]
+    if w is None:
+        shape = ((stacked,) if stacked else ()) + (in_dim, out_dim)
+        sharding = ((None,) if stacked else ()) + tuple(axes)
+        w = param(f"{name}.w", shape=shape, init_fn=fan_in_init(),
+                  dtype=dtype, sharding=sharding)
+        if use_bias:
+            bshape = ((stacked,) if stacked else ()) + (out_dim,)
+            bshard = ((None,) if stacked else ()) + (axes[-1],)
+            b = param(f"{name}.b", shape=bshape, init_fn=zeros_init(),
+                      dtype=dtype, sharding=bshard)
+        if stacked:
+            return (w, b) if use_bias else w
+    y = jnp.matmul(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def matmul(x, w, b=None):
+    y = jnp.matmul(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def embedding(name, vocab_size, dim, *, dtype=jnp.bfloat16):
+    return param(f"{name}.embedding", shape=(vocab_size, dim),
+                 init_fn=normal_init(0.02), dtype=dtype,
+                 sharding=("vocab", "embed"))
+
+
+def rmsnorm_weight(name, dim, *, stacked: int = 0, dtype=jnp.float32):
+    shape = ((stacked,) if stacked else ()) + (dim,)
+    sharding = ((None,) if stacked else ()) + (None,)
+    return param(f"{name}.scale", shape=shape, init_fn=ones_init(),
+                 dtype=dtype, sharding=sharding)
+
+
+def rmsnorm(x, weight, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim, max_seq, base=10000.0, dtype=jnp.float32):
+    inv = 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                          / head_dim))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # (S, hd/2)
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+def rope_at(pos, head_dim, base=10000.0, dtype=jnp.float32):
+    """cos/sin rows for a single (traced) position — O(head_dim), no table."""
+    inv = 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                          / head_dim))
+    freqs = pos.astype(jnp.float32) * inv           # (hd/2,)
+    return (jnp.cos(freqs)[None].astype(dtype),
+            jnp.sin(freqs)[None].astype(dtype))     # (1, hd/2)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x: (..., S, H, hd); cos/sin: (S_max, hd/2); positions: (..., S) or None."""
+    hd = x.shape[-1]
+    if positions is not None:
+        cos = jnp.take(cos, positions, axis=0)  # (..., S, hd/2)
+        sin = jnp.take(sin, positions, axis=0)
+        cos = cos[..., :, None, :]
+        sin = sin[..., :, None, :]
+    else:
+        S = x.shape[-3]
+        cos = cos[:S][None, :, None, :]
+        sin = sin[:S][None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / losses
+# ---------------------------------------------------------------------------
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def geglu(gate, up):
+    return jax.nn.gelu(gate.astype(jnp.float32),
+                       approximate=True).astype(gate.dtype) * up
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss_weight=0.0):
+    """Per-token CE; logits may be bf16 and vocab-sharded (reductions are
+    inserted by GSPMD). Returns (loss_per_token, z_loss_per_token)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    zl = z_loss_weight * lse ** 2 if z_loss_weight else jnp.zeros_like(ce)
+    return ce, zl

@@ -1,0 +1,166 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic
+matmuls shaped for the MXU + inter-chunk linear recurrence via lax.scan);
+decode is an O(1)-per-token state update.  Used standalone (mamba2-370m)
+and inside the Jamba hybrid.  Note (DESIGN.md §Arch-applicability): Jamba
+v0.1 ships Mamba-1 selective-scan layers; we realize them with the SSD
+formulation — the TPU-native choice (matmuls instead of elementwise scans).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.primitives import param
+from repro.kernels import ops
+from repro.models.common import normal_init, zeros_init
+from repro.models.config import ModelConfig
+
+
+def _p(name, shape, sharding, dtype, init=None):
+    return param(name, shape=shape, init_fn=init or normal_init(0.02),
+                 dtype=dtype, sharding=sharding)
+
+
+def _stk(stacked, shape, sharding):
+    if stacked:
+        return (stacked,) + shape, ("layers",) + sharding
+    return shape, sharding
+
+
+N_GROUPS = 1  # B/C projection groups (mamba2-370m and jamba use 1)
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * N_GROUPS * n
+    return d_in, h, n, conv_ch
+
+
+def ssm_params(cfg: ModelConfig, prefix: str, stacked: int = 0):
+    d = cfg.d_model
+    d_in, h, n, conv_ch = ssm_dims(cfg)
+    dt = cfg.jnp_dtype
+    w = {}
+    proj_out = 2 * d_in + 2 * N_GROUPS * n + h
+    shape, shard = _stk(stacked, (d, proj_out), ("embed", "mlp"))
+    w["w_in"] = _p(f"{prefix}.w_in", shape, shard, dt)
+    shape, shard = _stk(stacked, (cfg.ssm_conv_width, conv_ch), (None, "mlp"))
+    w["conv_w"] = _p(f"{prefix}.conv_w", shape, shard, dt,
+                     init=normal_init(0.1))
+    shape, shard = _stk(stacked, (conv_ch,), ("mlp",))
+    w["conv_b"] = _p(f"{prefix}.conv_b", shape, shard, dt, init=zeros_init())
+    shape, shard = _stk(stacked, (h,), ("mlp",))
+    w["A_log"] = _p(f"{prefix}.A_log", shape, shard, jnp.float32,
+                    init=lambda k, s, t: jnp.log(
+                        jax.random.uniform(k, s, t, 1.0, 16.0)))
+    w["D"] = _p(f"{prefix}.D", shape, shard, jnp.float32,
+                init=lambda k, s, t: jnp.ones(s, t))
+    w["dt_bias"] = _p(f"{prefix}.dt_bias", shape, shard, jnp.float32,
+                      init=lambda k, s, t: jnp.log(jnp.expm1(
+                          jax.random.uniform(k, s, t, 1e-3, 0.1))))
+    shape, shard = _stk(stacked, (d_in,), ("mlp",))
+    w["norm"] = _p(f"{prefix}.norm", shape, shard, jnp.float32,
+                   init=lambda k, s, t: jnp.ones(s, t))
+    shape, shard = _stk(stacked, (d_in, d), ("mlp", "embed"))
+    w["w_out"] = _p(f"{prefix}.w_out", shape, shard, dt)
+    return w
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_in, h, n, _ = ssm_dims(cfg)
+    g = N_GROUPS
+    z, xs, B, C, dtr = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + g * n, 2 * d_in + 2 * g * n],
+        axis=-1)
+    return z, xs, B, C, dtr
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    out = yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def ssm_apply(cfg: ModelConfig, w, x, h0=None, conv0=None, return_state=False):
+    """Full-sequence SSD mixer. x: (B, S, d) -> (B, S, d).
+
+    With ``return_state`` also returns (ssm_state, conv_state) for chunked
+    prefill / handoff to decode.
+    """
+    Bz, S, d = x.shape
+    d_in, h, n, conv_ch = ssm_dims(cfg)
+    g = N_GROUPS
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,do->bso", x, w["w_in"].astype(x.dtype))
+    z, xs, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)        # (B,S,conv_ch)
+    if conv0 is None:
+        pad = jnp.zeros((Bz, cfg.ssm_conv_width - 1, conv_ch), xbc.dtype)
+    else:
+        pad = conv0.astype(xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    # depthwise causal conv as a sum of shifted scaled copies (width is 4)
+    conv = sum(xbc_pad[:, i:i + S] * w["conv_w"].astype(xbc.dtype)[i]
+               for i in range(cfg.ssm_conv_width))
+    conv = conv + w["conv_b"].astype(conv.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + w["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))
+    y, state = ops.ssd_scan(
+        xs.reshape(Bz, S, h, p), dt, A,
+        Bm.reshape(Bz, S, g, n), Cm.reshape(Bz, S, g, n),
+        chunk=min(cfg.ssm_chunk, S), D=w["D"], h0=h0)
+    y = _gated_norm(y.reshape(Bz, S, d_in), z, w["norm"])
+    out = jnp.einsum("bsi,id->bsd", y, w["w_out"].astype(y.dtype))
+    if return_state:
+        conv_tail = xbc_pad[:, S:S + cfg.ssm_conv_width - 1]
+        if conv_tail.shape[1] < cfg.ssm_conv_width - 1:  # S < width-1
+            conv_tail = xbc_pad[:, -(cfg.ssm_conv_width - 1):]
+        return out, (state, conv_tail)
+    return out
+
+
+def ssm_init_cache(cfg: ModelConfig, batch, dtype):
+    d_in, h, n, conv_ch = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, w, x, cache):
+    """One-token decode. x: (B, 1, d). Returns (y, new_cache)."""
+    Bz = x.shape[0]
+    d_in, h, n, conv_ch = ssm_dims(cfg)
+    g = N_GROUPS
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,do->bso", x, w["w_in"].astype(x.dtype))
+    z, xs, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]   # (B, conv_ch)
+
+    conv_buf = jnp.concatenate(
+        [cache["conv"], xbc[:, None]], axis=1)           # (B, w, ch)
+    conv = jnp.einsum("bwc,wc->bc", conv_buf.astype(jnp.float32),
+                      w["conv_w"].astype(jnp.float32))
+    conv = conv + w["conv_b"].astype(jnp.float32)
+    conv = jax.nn.silu(conv).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)[:, 0]
+                         + w["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))
+    y, state = ops.ssd_decode_step(
+        cache["state"], xs.reshape(Bz, h, p), dt, A,
+        Bm.reshape(Bz, g, n), Cm.reshape(Bz, g, n), D=w["D"])
+    y = _gated_norm(y.reshape(Bz, 1, d_in), z, w["norm"])
+    out = jnp.einsum("bsi,id->bsd", y, w["w_out"].astype(y.dtype))
+    return out, {"state": state, "conv": conv_buf[:, 1:]}

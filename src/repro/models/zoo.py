@@ -1,0 +1,469 @@
+"""Model zoo: build init/forward/decode functions for every assigned arch.
+
+The paper's thesis at LLM scale: weights are declared through the `param`
+effect primitive, so the SAME effectful model function runs
+
+  * under ``seed``       -> parameter initialization,
+  * under ``eval_shape`` -> abstract init for the multi-pod dry-run,
+  * under ``substitute`` -> apply with an explicit params pytree,
+
+and all of it inside ``jit``/``pjit`` on a production mesh — handlers are
+Python-runtime-only and invisible to the tracer.
+
+Layer stacking: per-layer weights carry a leading stack dim and the forward
+runs ``lax.scan`` over layers (small HLO, fast compiles) with configurable
+rematerialization.  Heterogeneous schedules (Jamba periods, DeepSeek
+dense-prefix) scan over the *period* with the pattern unrolled inside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import handlers
+from repro.core.primitives import param
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import ssm as ssmm
+from repro.models import common
+from repro.models.common import (constrain, normal_init, rmsnorm_weight,
+                                 rope_frequencies, zeros_init)
+from repro.models.config import ModelConfig, ShapeConfig
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+# ---------------------------------------------------------------------------
+# layer schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                   # attn | attn_bidir | ssm | none
+    ffn: Optional[str]           # mlp | moe | None
+    d_ff: int = 0
+    cross: bool = False          # decoder cross-attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    name: str
+    n: int                       # scan length (layers or periods)
+    specs: Tuple[LayerSpec, ...]  # unrolled pattern inside the scan body
+
+
+def layer_groups(cfg: ModelConfig) -> List[Group]:
+    if cfg.is_encoder_decoder:
+        return [
+            Group("encoder", cfg.num_encoder_layers,
+                  (LayerSpec("attn_bidir", "mlp", cfg.d_ff),)),
+            Group("decoder", cfg.num_layers,
+                  (LayerSpec("attn", "mlp", cfg.d_ff, cross=True),)),
+        ]
+    if cfg.family == "ssm":
+        return [Group("layers", cfg.num_layers, (LayerSpec("ssm", None),))]
+    if cfg.family == "hybrid":
+        period = cfg.attn_layer_period
+        specs = tuple(
+            LayerSpec("attn" if cfg.is_attn_layer(i) else "ssm",
+                      "moe" if cfg.is_moe_layer(i) else "mlp",
+                      cfg.moe_d_ff if cfg.is_moe_layer(i) else cfg.d_ff)
+            for i in range(period))
+        return [Group("periods", cfg.num_layers // period, specs)]
+    if cfg.moe:
+        gs = []
+        if cfg.first_k_dense:
+            gs.append(Group("dense", cfg.first_k_dense,
+                            (LayerSpec("attn", "mlp", cfg.d_ff),)))
+        gs.append(Group("moe", cfg.num_layers - cfg.first_k_dense,
+                        (LayerSpec("attn", "moe", cfg.moe_d_ff),)))
+        return gs
+    return [Group("layers", cfg.num_layers, (LayerSpec("attn", "mlp",
+                                                       cfg.d_ff),))]
+
+
+# ---------------------------------------------------------------------------
+# per-block params / apply
+# ---------------------------------------------------------------------------
+
+def _block_params(cfg: ModelConfig, prefix: str, spec: LayerSpec, stacked):
+    w = {"ln1": rmsnorm_weight(f"{prefix}.ln1", cfg.d_model, stacked=stacked)}
+    if spec.mixer.startswith("attn"):
+        w["mixer"] = attn.attn_params(cfg, f"{prefix}.attn", stacked)
+    elif spec.mixer == "ssm":
+        w["mixer"] = ssmm.ssm_params(cfg, f"{prefix}.ssm", stacked)
+    if spec.cross:
+        w["lnx"] = rmsnorm_weight(f"{prefix}.lnx", cfg.d_model,
+                                  stacked=stacked)
+        w["xattn"] = attn.gqa_params(cfg, f"{prefix}.xattn", stacked)
+    if spec.ffn is not None:
+        w["ln2"] = rmsnorm_weight(f"{prefix}.ln2", cfg.d_model,
+                                  stacked=stacked)
+        if spec.ffn == "moe":
+            w["ffn"] = mlpm.moe_params(cfg, f"{prefix}.moe", stacked,
+                                       ep_degree=_ep_degree(cfg))
+        else:
+            w["ffn"] = mlpm.mlp_params(cfg, f"{prefix}.mlp", stacked,
+                                       d_ff=spec.d_ff)
+    return w
+
+
+def _ep_degree(cfg: ModelConfig) -> int:
+    """Expert-parallel degree the weights are padded for (mesh-dependent;
+    see distributed.sharding.ep_degree_for)."""
+    from repro.distributed.sharding import ep_degree_for
+    return ep_degree_for(cfg)
+
+
+def _xattn_apply(cfg, w, x, enc_out=None, enc_kv=None):
+    """Cross-attention; enc k/v computed from enc_out (train) or cached."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, w["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, hd)
+    if enc_kv is None:
+        k = jnp.einsum("bsd,dh->bsh", enc_out, w["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", enc_out, w["wv"].astype(x.dtype))
+        Se = enc_out.shape[1]
+        k = k.reshape(B, Se, K, hd)
+        v = v.reshape(B, Se, K, hd)
+    else:
+        k, v = enc_kv
+    out = ops.attention(q, k, v, causal=False)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, w["wo"].astype(out.dtype))
+
+
+def _block_apply(cfg: ModelConfig, spec: LayerSpec, w, x, rope,
+                 enc_out=None, positions=None):
+    """Full-sequence block. Returns (x, moe_load).
+
+    Megatron-scoped SP: block-internal activations are constrained to the
+    ``seq_inner`` rule (gathered when sp_scoped; see distributed.sharding),
+    so dW contractions avoid model-axis reductions while the residual
+    stream and remat carries stay sequence-sharded.  MoE blocks keep the
+    sequence sharded — EP dispatch requires token-parallel layout."""
+    e_pad = mlpm.padded_experts(cfg, _ep_degree(cfg)) if cfg.moe else 1
+    load = jnp.zeros((e_pad,), jnp.float32)
+    h = ops.rmsnorm(x, w["ln1"])
+    h = constrain(h, ("batch", "seq_inner", None))
+    if spec.mixer == "attn":
+        h = attn.attn_apply(cfg, w["mixer"], h, rope, positions)
+    elif spec.mixer == "attn_bidir":
+        h = attn.gqa_apply(cfg, w["mixer"], h, rope, positions, causal=False)
+    elif spec.mixer == "ssm":
+        h = ssmm.ssm_apply(cfg, w["mixer"], h)
+    x = x + constrain(h, ("batch", "seq", None))
+    if spec.cross:
+        h = ops.rmsnorm(x, w["lnx"])
+        h = constrain(h, ("batch", "seq_inner", None))
+        x = x + constrain(_xattn_apply(cfg, w["xattn"], h, enc_out=enc_out),
+                          ("batch", "seq", None))
+    if spec.ffn is not None:
+        h = ops.rmsnorm(x, w["ln2"])
+        if spec.ffn == "moe":
+            h, aux = mlpm.moe_apply(cfg, w["ffn"], h)
+            load = aux["load"]
+        else:
+            h = constrain(h, ("batch", "seq_inner", None))
+            h = mlpm.mlp_apply(cfg, w["ffn"], h)
+        x = x + constrain(h, ("batch", "seq", None))
+    return x, load
+
+
+def _block_decode(cfg: ModelConfig, spec: LayerSpec, w, x, cache, pos, rope):
+    """Single-token decode. Returns (x, new_cache)."""
+    h = ops.rmsnorm(x, w["ln1"])
+    new_cache = dict(cache)
+    if spec.mixer == "attn":
+        h, kv = attn.attn_decode(cfg, w["mixer"], h, cache["kv"], pos, rope)
+        new_cache["kv"] = kv
+    elif spec.mixer == "ssm":
+        h, st = ssmm.ssm_decode(cfg, w["mixer"], h, cache["ssm"])
+        new_cache["ssm"] = st
+    x = x + h
+    if spec.cross:
+        h = ops.rmsnorm(x, w["lnx"])
+        x = x + _xattn_apply(cfg, w["xattn"], h,
+                             enc_kv=(cache["cross"]["k"],
+                                     cache["cross"]["v"]))
+    if spec.ffn is not None:
+        h = ops.rmsnorm(x, w["ln2"])
+        if spec.ffn == "moe":
+            h, _ = mlpm.moe_apply(cfg, w["ffn"], h)
+        else:
+            h = mlpm.mlp_apply(cfg, w["ffn"], h)
+        x = x + h
+    return x, new_cache
+
+
+def _block_cache(cfg: ModelConfig, spec: LayerSpec, batch, seq_len, dtype,
+                 enc_len=0):
+    c = {}
+    if spec.mixer == "attn":
+        c["kv"] = attn.attn_init_cache(cfg, batch, seq_len, dtype)
+    elif spec.mixer == "ssm":
+        c["ssm"] = ssmm.ssm_init_cache(cfg, batch, dtype)
+    if spec.cross:
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        c["cross"] = {"k": jnp.zeros((batch, enc_len, K, hd), dtype),
+                      "v": jnp.zeros((batch, enc_len, K, hd), dtype)}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+class LM:
+    """A complete language model (decoder-only or encoder-decoder) built
+    from a :class:`ModelConfig`, expressed with `param` effect sites."""
+
+    def __init__(self, cfg: ModelConfig, remat: str = "full"):
+        self.cfg = cfg
+        self.groups = layer_groups(cfg)
+        self.remat = remat
+
+    # -- parameters ---------------------------------------------------------
+    def params_fn(self):
+        cfg = self.cfg
+        w = {"embed": common.embedding("embed", cfg.vocab_size, cfg.d_model,
+                                       dtype=cfg.jnp_dtype)}
+        for g in self.groups:
+            w[g.name] = {
+                f"p{j}": _block_params(cfg, f"{g.name}.p{j}", spec, g.n)
+                for j, spec in enumerate(g.specs)
+            }
+        w["final_norm"] = rmsnorm_weight("final_norm", cfg.d_model)
+        if cfg.is_encoder_decoder:
+            w["enc_norm"] = rmsnorm_weight("enc_norm", cfg.d_model)
+        if not cfg.tie_embeddings:
+            w["unembed"] = param("unembed", shape=(cfg.d_model,
+                                                   cfg.vocab_size),
+                                 init_fn=normal_init(0.02),
+                                 dtype=cfg.jnp_dtype,
+                                 sharding=("embed", "vocab"))
+        if cfg.mtp:
+            w["mtp"] = {
+                "ln_h": rmsnorm_weight("mtp.ln_h", cfg.d_model),
+                "ln_e": rmsnorm_weight("mtp.ln_e", cfg.d_model),
+                "proj": param("mtp.proj", shape=(2 * cfg.d_model,
+                                                 cfg.d_model),
+                              init_fn=normal_init(0.02), dtype=cfg.jnp_dtype,
+                              sharding=("embed", None)),
+                "block": _block_params(
+                    cfg, "mtp.block",
+                    LayerSpec("attn", "mlp", cfg.moe_d_ff or cfg.d_ff), 0),
+            }
+        return w
+
+    def init(self, rng_key):
+        return handlers.seed(self.params_fn, rng_key)()
+
+    def abstract_params(self):
+        """(shape pytree, logical-sharding pytree) without allocating."""
+        aux = {}
+
+        def fn(key):
+            with handlers.trace() as tr:
+                w = handlers.seed(self.params_fn, key)()
+            id2s = {id(m["value"]): m.get("sharding")
+                    for m in tr.values() if m["type"] == "param"}
+            aux["spec"] = jax.tree.map(lambda v: id2s.get(id(v)), w)
+            return w
+        shapes = jax.eval_shape(fn, jax.random.PRNGKey(0))
+        return shapes, aux["spec"]
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, w, tokens):
+        x = jnp.take(w["embed"], tokens, axis=0)
+        if self.cfg.tie_embeddings:  # gemma-style sqrt(d) scaling
+            x = x * jnp.asarray(self.cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def _unembed_w(self, w):
+        return (w["embed"].T if self.cfg.tie_embeddings else w["unembed"])
+
+    def _rope(self, seq_len):
+        cfg = self.cfg
+        hd = (cfg.qk_rope_head_dim if cfg.attn_type == "mla"
+              else cfg.head_dim)
+        return rope_frequencies(hd, max(seq_len, 1), base=cfg.rope_base)
+
+    # -- group scan ----------------------------------------------------------
+    def _run_groups(self, w, x, rope, enc_out=None, which=None):
+        cfg = self.cfg
+        loads = {}
+        policy = REMAT_POLICIES[self.remat]
+        for g in self.groups:
+            if which and g.name not in which:
+                continue
+
+            def body(x, wi, _g=g):
+                x = constrain(x, ("batch", "seq", None))
+                tot = None
+                for j, spec in enumerate(_g.specs):
+                    x, load = _block_apply(cfg, spec, wi[f"p{j}"], x, rope,
+                                           enc_out=enc_out)
+                    tot = load if tot is None else tot + load
+                x = constrain(x, ("batch", "seq", None))
+                return x, tot
+
+            fn = body if policy is None else jax.checkpoint(
+                body, policy=policy, prevent_cse=False)
+            x, ld = jax.lax.scan(fn, x, w[g.name])
+            if cfg.moe:
+                loads[g.name] = ld      # (n, E_pad)
+        return x, loads
+
+    # -- training / prefill forward ------------------------------------------
+    def forward(self, w, batch, return_logits=False):
+        """batch: tokens (B,S) [+ labels, + patch/src embeds].  Returns
+        (loss, metrics) or logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(w, tokens)
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+        x = constrain(x, ("batch", "seq", None))
+        rope = self._rope(max(S, cfg.frontend_len))
+
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            src = batch["src_embeds"].astype(x.dtype)
+            src = constrain(src, ("batch", "seq", None))
+            enc_rope = self._rope(src.shape[1])
+            enc_out, _ = self._run_groups(w, src, enc_rope,
+                                          which=("encoder",))
+            enc_out = ops.rmsnorm(enc_out, w["enc_norm"])
+            x, loads = self._run_groups(w, x, rope, enc_out=enc_out,
+                                        which=("decoder",))
+        else:
+            x, loads = self._run_groups(w, x, rope)
+
+        x = ops.rmsnorm(x, w["final_norm"])
+        uw = self._unembed_w(w)
+        if return_logits == "last":   # prefill: logits for the next token
+            xl = x[:, -1:]
+            return jnp.einsum("bsd,dv->bsv", xl, uw.astype(x.dtype))[:, 0]
+        if return_logits:
+            return jnp.einsum("bsd,dv->bsv", x, uw.astype(x.dtype))
+
+        labels = batch["labels"]
+        xt = x.reshape(B * S, cfg.d_model)
+        ce, zl = ops.softmax_xent(xt, uw, labels.reshape(-1),
+                                  z_loss_weight=cfg.z_loss_weight)
+        loss = ce.mean() + zl.mean()
+        metrics = {"ce": ce.mean(), "z_loss": zl.mean()}
+        if loads:
+            aux = sum(self._aux_loss(ld) for ld in loads.values())
+            loss = loss + cfg.aux_loss_weight * aux
+            # per-(group, layer, expert) loads: drives the aux-free router
+            # bias update in launch/train.py (DeepSeek-V3 style)
+            metrics["moe_load"] = dict(loads)
+            metrics["aux_loss"] = aux
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(w, x, batch)
+            loss = loss + 0.3 * mtp_loss
+            metrics["mtp_loss"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _aux_loss(self, load):
+        """Switch-style balance penalty from per-layer load fractions."""
+        e = self.cfg.num_experts
+        ld = load[:, :e]
+        return (e * (ld * ld).sum(-1)).mean()
+
+    def _mtp_loss(self, w, h, batch):
+        """DeepSeek-V3 multi-token prediction (depth-1, dense block)."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        nxt = self._embed(w, jnp.roll(tokens, -1, axis=1))
+        m = w["mtp"]
+        cat = jnp.concatenate([ops.rmsnorm(h, m["ln_h"]),
+                               ops.rmsnorm(nxt, m["ln_e"])], axis=-1)
+        x = jnp.einsum("bsd,de->bse", cat, m["proj"].astype(cat.dtype))
+        spec = LayerSpec("attn", "mlp", cfg.moe_d_ff or cfg.d_ff)
+        x, _ = _block_apply(cfg, spec, m["block"], x, self._rope(S))
+        x = ops.rmsnorm(x, w["final_norm"])
+        lbl2 = jnp.roll(labels, -1, axis=1)
+        ce, _ = ops.softmax_xent(x.reshape(B * S, -1), self._unembed_w(w),
+                                 lbl2.reshape(-1))
+        mask = (jnp.arange(S) < S - 2).astype(jnp.float32)
+        ce = ce.reshape(B, S) * mask
+        return ce.sum() / (mask.sum() * B)
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch, seq_len, enc_len=0):
+        """Stacked per-group decode caches (leading dim = scan length)."""
+        cfg = self.cfg
+        dt = cfg.jnp_dtype
+        caches = {}
+        for g in self.groups:
+            if g.name == "encoder":
+                continue
+
+            def one(spec):
+                return _block_cache(cfg, spec, batch, seq_len, dt)
+            single = {f"p{j}": one(spec) for j, spec in enumerate(g.specs)}
+            caches[g.name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (g.n,) + a.shape), single)
+        return caches
+
+    def decode_step(self, w, tokens, cache, pos):
+        """tokens: (B, 1) -> (logits (B, V), new_cache).  ``pos`` scalar.
+        RoPE is evaluated at ``pos`` directly — no (S, hd) table."""
+        cfg = self.cfg
+        x = self._embed(w, tokens)
+        hd = (cfg.qk_rope_head_dim if cfg.attn_type == "mla"
+              else cfg.head_dim)
+        rope = common.rope_at(jnp.asarray(pos), hd, base=cfg.rope_base)
+        groups = [g for g in self.groups if g.name != "encoder"]
+        for g in groups:
+            def body(x, wc, _g=g):
+                wi, ci = wc
+                x = constrain(x, ("batch", None, None))
+                new_c = {}
+                for j, spec in enumerate(_g.specs):
+                    x, nc = _block_decode(cfg, spec, wi[f"p{j}"], x,
+                                          ci[f"p{j}"], pos, rope)
+                    new_c[f"p{j}"] = nc
+                return x, new_c
+            x, new_cache = jax.lax.scan(body, x, (w[g.name], cache[g.name]))
+            cache = dict(cache, **{g.name: new_cache})
+        x = ops.rmsnorm(x, w["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            self._unembed_w(w).astype(x.dtype))[:, 0]
+        return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (dense-equivalent and active)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    lm = LM(cfg)
+    shapes, _ = lm.abstract_params()
+    total = 0
+    for leaf in jax.tree.leaves(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        # routed expert weights are the only rank-4 leaves: (L, E, d, f)
+        if active_only and len(leaf.shape) == 4:
+            n = n * cfg.num_experts_per_tok // max(cfg.num_experts, 1)
+        total += n
+    return total

@@ -1,0 +1,20 @@
+from .optimizers import (
+    GradientTransformation,
+    adam,
+    adamw,
+    adafactor,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    scale,
+    sgd,
+    warmup_cosine,
+)
+from .compression import int8_compress_decompress, error_feedback_compress
+
+__all__ = [
+    "GradientTransformation", "adam", "adamw", "adafactor", "sgd", "chain",
+    "scale", "clip_by_global_norm", "global_norm", "apply_updates",
+    "warmup_cosine", "int8_compress_decompress", "error_feedback_compress",
+]

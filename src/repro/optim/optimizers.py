@@ -1,0 +1,238 @@
+"""Functional optimizers (optax-style GradientTransformation protocol).
+
+Large-model specifics:
+- ``mu_dtype``/``nu_dtype`` let the moment buffers live in bf16 so the
+  optimizer state of trillion-parameter MoE models fits the per-chip HBM
+  budget (see DESIGN.md §memory).
+- ``adafactor`` provides factored second moments (rank-1) as the fallback
+  when even bf16 moments are too large.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def chain(*transforms) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_schedule(schedule: Callable) -> GradientTransformation:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params=None):
+        lr = schedule(count)
+        return jax.tree_util.tree_map(lambda g: g * -lr, grads), count + 1
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype),
+            grads), state
+
+    return GradientTransformation(init, update)
+
+
+def sgd(learning_rate, momentum: Optional[float] = None
+        ) -> GradientTransformation:
+    def init(params):
+        if momentum is None:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        if momentum is None:
+            return jax.tree_util.tree_map(
+                lambda g: -learning_rate * g, grads), state
+        state = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state, grads)
+        return jax.tree_util.tree_map(
+            lambda m: -learning_rate * m, state), state
+
+    return GradientTransformation(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adam(learning_rate, b1=0.9, b2=0.999, eps=1e-8, mu_dtype=None,
+         nu_dtype=None, schedule: Optional[Callable] = None
+         ) -> GradientTransformation:
+    lr_fn = schedule if schedule is not None else (lambda _: learning_rate)
+
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=mu_dtype or p.dtype), params)
+        nu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=nu_dtype or p.dtype), params)
+        return AdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)
+                          ).astype(m.dtype), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                          ).astype(v.dtype), state.nu, grads)
+        bc1 = 1 - b1 ** cf
+        bc2 = 1 - b2 ** cf
+        lr = lr_fn(count)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: (-lr * (m.astype(jnp.float32) / bc1)
+                          / (jnp.sqrt(v.astype(jnp.float32) / bc2) + eps)),
+            mu, nu)
+        return updates, AdamState(count, mu, nu)
+
+    return GradientTransformation(init, update)
+
+
+def adamw(learning_rate, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          mu_dtype=None, nu_dtype=None, schedule: Optional[Callable] = None
+          ) -> GradientTransformation:
+    base = adam(learning_rate, b1, b2, eps, mu_dtype, nu_dtype, schedule)
+    lr_fn = schedule if schedule is not None else (lambda _: learning_rate)
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params=None):
+        updates, new_state = base.update(grads, state, params)
+        if params is not None:
+            lr = lr_fn(new_state.count)
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u - lr * weight_decay * p.astype(jnp.float32),
+                updates, params)
+        return updates, new_state
+
+    return GradientTransformation(init, update)
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    v_row: dict
+    v_col: dict
+    v_full: dict  # for <2D params
+
+
+def adafactor(learning_rate, decay=0.8, eps=1e-30, clip_threshold=1.0
+              ) -> GradientTransformation:
+    """Factored second-moment optimizer: O(n+m) state for (n,m) matrices."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        v_row = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+            if _factored(p) else jnp.zeros((), jnp.float32), params)
+        v_col = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if _factored(p) else jnp.zeros((), jnp.float32), params)
+        v_full = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((), jnp.float32) if _factored(p)
+            else jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdafactorState(jnp.zeros((), jnp.int32), v_row, v_col, v_full)
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        beta = 1.0 - cf ** (-decay)
+
+        def upd(g, vr, vc, vf):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                vr = beta * vr + (1 - beta) * g2.mean(-1)
+                vc = beta * vc + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                u = g / jnp.sqrt(denom + eps)
+            else:
+                vf = beta * vf + (1 - beta) * g2
+                u = g / jnp.sqrt(vf + eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -learning_rate * u, vr, vc, vf
+
+        flat_g, tree = jax.tree_util.tree_flatten(grads)
+        flat_vr = tree.flatten_up_to(state.v_row)
+        flat_vc = tree.flatten_up_to(state.v_col)
+        flat_vf = tree.flatten_up_to(state.v_full)
+        outs = [upd(g, vr, vc, vf) for g, vr, vc, vf
+                in zip(flat_g, flat_vr, flat_vc, flat_vf)]
+        updates = tree.unflatten([o[0] for o in outs])
+        v_row = tree.unflatten([o[1] for o in outs])
+        v_col = tree.unflatten([o[2] for o in outs])
+        v_full = tree.unflatten([o[3] for o in outs])
+        return updates, AdafactorState(count, v_row, v_col, v_full)
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def warmup_cosine(peak_lr, warmup_steps, total_steps, end_lr_frac=0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (end_lr_frac + (1 - end_lr_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

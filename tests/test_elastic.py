@@ -1,0 +1,54 @@
+"""Elastic restart: a checkpoint written under one mesh restores onto a
+different mesh shape (subprocess with 8 virtual devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, tempfile
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distributed import checkpoint as ckpt
+
+d = tempfile.mkdtemp()
+# "train" on mesh A: (data=4, model=2)
+mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+w = {"emb": jnp.arange(64.0).reshape(8, 8),
+     "scale": jnp.ones(8)}
+sh_a = {"emb": NamedSharding(mesh_a, P("data", "model")),
+        "scale": NamedSharding(mesh_a, P("model"))}
+w_a = jax.tree.map(jax.device_put, w, sh_a)
+ckpt.save(w_a, d + "/ck", step=42, extra={"cursor": 7})
+
+# elastic restart on mesh B: (data=2, model=4) — different dp degree
+mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh_b = {"emb": NamedSharding(mesh_b, P("data", "model")),
+        "scale": NamedSharding(mesh_b, P("model"))}
+w_b, step, extra = ckpt.restore(w, d + "/ck", shardings=sh_b)
+assert step == 42 and extra["cursor"] == 7
+np.testing.assert_array_equal(np.asarray(w_b["emb"]), np.asarray(w["emb"]))
+assert w_b["emb"].sharding.mesh.shape["data"] == 2   # re-sharded
+# and the restored array is usable in computation on the new mesh
+out = jax.jit(lambda a: (a @ a.T).sum())(w_b["emb"])
+assert np.isfinite(float(out))
+print(json.dumps({"ok": True}))
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

@@ -1,0 +1,121 @@
+"""Infrastructure: checkpoint/restore (incl. elastic), data determinism,
+optimizers, gradient compression, HLO cost analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import random
+
+from repro import optim
+from repro.data import SyntheticLMData
+from repro.distributed import checkpoint as ckpt
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16),
+                  "d": jnp.zeros((), jnp.int32)}}
+    ckpt.save(tree, str(tmp_path / "ck"), step=7,
+              extra={"data_cursor": 123})
+    assert ckpt.latest_step(str(tmp_path / "ck")) == 7
+    restored, step, extra = ckpt.restore(tree, str(tmp_path / "ck"))
+    assert step == 7 and extra["data_cursor"] == 123
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, dtype=np.float64), np.asarray(b, dtype=np.float64))
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    tree = {"a": jnp.zeros(3)}
+    ckpt.save(tree, str(tmp_path / "ck"), step=1)
+    ckpt.save({"a": jnp.ones(3)}, str(tmp_path / "ck"), step=2)
+    restored, step, _ = ckpt.restore(tree, str(tmp_path / "ck"))
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(3))
+
+
+def test_data_determinism_and_sharding():
+    d = SyntheticLMData(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    a = d.batch_at(5)
+    b = d.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # shards partition the global batch deterministically
+    s0 = d.batch_at(5, dp_rank=0, dp_size=2)
+    s1 = d.batch_at(5, dp_rank=1, dp_size=2)
+    assert s0["tokens"].shape == (4, 64)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_optimizers_converge_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p - target) ** 2)
+
+    for make in (lambda: optim.adam(0.1),
+                 lambda: optim.adamw(0.1, weight_decay=0.0),
+                 lambda: optim.adafactor(0.3),
+                 lambda: optim.sgd(0.1, momentum=0.9)):
+        opt = make()
+        p = jnp.zeros(3)
+        state = opt.init(p)
+        for _ in range(300):
+            g = jax.grad(loss)(p)
+            upd, state = opt.update(g, state, p)
+            p = optim.apply_updates(p, upd)
+        assert float(loss(p)) < 1e-2, make
+
+
+def test_clip_by_global_norm():
+    opt = optim.clip_by_global_norm(1.0)
+    g = {"a": jnp.full(4, 10.0)}
+    upd, _ = opt.update(g, opt.init(g))
+    assert abs(float(optim.global_norm(upd)) - 1.0) < 1e-5
+
+
+def test_int8_compression_error_feedback():
+    from repro.optim.compression import error_feedback_init
+    g = {"w": random.normal(random.PRNGKey(0), (256,))}
+    ef = error_feedback_init(g)
+    out, ef2 = optim.error_feedback_compress(g, ef)
+    # compressed+feedback roundtrip preserves the signal on average
+    assert out["w"].dtype == g["w"].dtype
+    assert float(jnp.abs(out["w"] - g["w"]).mean()) < 0.05
+    # residual carries the quantization error for the next step
+    assert float(jnp.abs(ef2.residual["w"]).max()) > 0
+    # error feedback is unbiased over repeated steps: residual stays bounded
+    for _ in range(10):
+        out, ef2 = optim.error_feedback_compress(g, ef2)
+    assert float(jnp.abs(ef2.residual["w"]).max()) < 0.1
+
+
+def test_hlo_cost_trip_counts():
+    """The analyzer multiplies while bodies by known_trip_count (XLA's own
+    cost_analysis does not — the whole reason the module exists)."""
+    from repro.launch.hlo_cost import analyze_text
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=8)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    res = analyze_text(compiled.as_text())
+    expected = 8 * 2 * 128 * 256 * 256
+    assert res["flops"] == expected, (res["flops"], expected)
+    raw = compiled.cost_analysis()["flops"]
+    assert raw == expected / 8  # XLA counts the body once
+
+
+def test_warmup_cosine_schedule():
+    sched = optim.warmup_cosine(1.0, 10, 100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert abs(float(sched(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(sched(jnp.asarray(100))) < 0.2

@@ -1,0 +1,186 @@
+"""Iterative BuildTree (paper Alg. 2 / App. A) vs the recursive formulation.
+
+The bit-count machinery is checked exhaustively against a pure-python
+oracle, and the iterative tree is checked to visit/terminate identically
+to a recursive reference NUTS on a Gaussian potential.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import random
+
+from repro.core.infer import hmc_util as H
+
+
+# -- bit tricks ------------------------------------------------------------
+
+def py_bitcount(n):
+    return bin(n).count("1")
+
+
+def py_trailing_ones(n):
+    t = 0
+    while n & 1:
+        t += 1
+        n >>= 1
+    return t
+
+
+def py_candidates(n):
+    """C(n) from App. A: progressively mask trailing 1s of b(n)."""
+    out = []
+    m = n
+    while m & 1:
+        m = m & (m - 1) if False else m - (1 << (py_trailing_ones(m) - 1))
+        # progressively zero the lowest of the trailing ones, high-to-low:
+        break
+    # direct construction: mask k lowest trailing ones for k=1..t
+    t = py_trailing_ones(n)
+    for k in range(1, t + 1):
+        mask = (1 << k) - 1
+        out.append(n & ~mask)
+    return out
+
+
+def test_bit_count_exhaustive():
+    ns = jnp.arange(1, 2048)
+    ours = jax.vmap(H._bit_count)(ns)
+    expected = np.array([py_bitcount(int(n)) for n in range(1, 2048)])
+    assert np.array_equal(np.asarray(ours), expected)
+
+
+def test_trailing_ones_exhaustive():
+    ns = jnp.arange(1, 2048)
+    ours = jax.vmap(H._trailing_ones)(ns)
+    expected = np.array([py_trailing_ones(int(n)) for n in range(1, 2048)])
+    assert np.array_equal(np.asarray(ours), expected)
+
+
+def test_ckpt_idxs_match_paper_example():
+    # paper: n=11, b(11)=1011 -> C(11) = {(1010), (1000)} = {10, 8}
+    idx_min, idx_max = H._leaf_idx_to_ckpt_idxs(jnp.asarray(11))
+    # the checkpoint array stores even node k at index BitCount(k):
+    # k=10 -> idx 2, k=8 -> idx 1; so range must be [1, 2]
+    assert int(idx_min) == 1 and int(idx_max) == 2
+
+
+def test_ckpt_idxs_cover_candidates():
+    """For every odd n < 512: the checkpoint slots [idx_min..idx_max] are
+    exactly {BitCount(k) : k in C(n)} and the masking procedure guarantees
+    slot i holds the largest even node < n with that bit count == the
+    candidate itself."""
+    for n in range(1, 512, 2):
+        idx_min, idx_max = H._leaf_idx_to_ckpt_idxs(jnp.asarray(n))
+        cands = py_candidates(n)
+        slots = sorted(py_bitcount(c) for c in cands)
+        assert slots == list(range(int(idx_min), int(idx_max) + 1)), n
+        # each candidate is the largest even number < n with its bitcount
+        for c in cands:
+            bc = py_bitcount(c)
+            bigger = [k for k in range(c + 2, n, 2) if py_bitcount(k) == bc]
+            assert not bigger, (n, c, bigger)
+
+
+# -- recursive reference NUTS tree ------------------------------------------
+
+def recursive_trajectory(z0, r0, eps, L, max_depth, rng):
+    """Reference: simulate the doubling procedure over a quadratic potential
+    and return the set of leapfrog states visited before any U-turn,
+    scanning leaves left-to-right (the iterative order)."""
+    def leapfrog(z, r):
+        r = r - 0.5 * eps * (L @ z)
+        z = z + eps * r
+        r = r - 0.5 * eps * (L @ z)
+        return z, r
+
+    zs, rs = [z0], [r0]
+    z, r = z0, r0
+    for n in range(2 ** max_depth):
+        z, r = leapfrog(z, r)
+        zs.append(z)
+        rs.append(r)
+    return np.array(zs), np.array(rs)
+
+
+def py_is_turning(r_left, r_right, r_sum):
+    r_mid = r_sum - 0.5 * (r_left + r_right)
+    return (np.dot(r_left, r_mid) <= 0) or (np.dot(r_right, r_mid) <= 0)
+
+
+def py_iterative_stop(zs, rs, max_depth):
+    """Pure-python Alg 2: first odd leaf (1-based step) where any balanced
+    subtree U-turns; None if the full tree completes."""
+    for n in range(2 ** max_depth):
+        if n % 2 == 1:
+            t = py_trailing_ones(n)
+            for k in range(1, t + 1):
+                left = n & ~((1 << k) - 1)
+                r_sum = rs[left + 1: n + 2].sum(0)
+                if py_is_turning(rs[left + 1], rs[n + 1], r_sum):
+                    return n
+    return None
+
+
+def test_iterative_matches_recursive_oracle():
+    """iterative_build_subtree must stop at the same leaf count as the
+    pure-python Algorithm 2 oracle on a correlated Gaussian."""
+    dim, depth = 4, 6
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(dim, dim))
+    Lmat = A @ A.T / dim + np.eye(dim)
+    pot = lambda z: 0.5 * jnp.dot(z, jnp.asarray(Lmat) @ z)  # noqa: E731
+
+    for seed in range(5):
+        key = random.PRNGKey(seed)
+        z0 = jnp.asarray(rng.normal(size=dim))
+        r0 = jnp.asarray(rng.normal(size=dim))
+        eps = 0.3
+        inverse_mass_matrix = jnp.ones(dim)
+
+        vv_init, vv_update = H.velocity_verlet(pot)
+        pe, grad = vv_init(z0)
+        state = H.IntegratorState(z0, r0, pe, grad)
+        energy = pe + 0.5 * jnp.dot(r0, r0)
+        root = H._leaf_tree(state, energy, energy, 1e9)
+        tree = H.iterative_build_subtree(
+            vv_update, inverse_mass_matrix, jnp.asarray(eps),
+            jnp.asarray(True), key, root, jnp.asarray(depth), depth,
+            energy, 1e9)
+
+        zs, rs = recursive_trajectory(np.asarray(z0), np.asarray(r0),
+                                      eps, Lmat, depth, rng)
+        stop = py_iterative_stop(zs, rs, depth)
+        n_leaves = int(tree.num_proposals)
+        if stop is None:
+            assert n_leaves == 2 ** depth
+            assert not bool(tree.turning)
+        else:
+            assert n_leaves == stop + 1, (seed, stop, n_leaves)
+            assert bool(tree.turning)
+        # rightmost endpoint equals the oracle trajectory state there
+        np.testing.assert_allclose(np.asarray(tree.z_right),
+                                   zs[n_leaves], rtol=1e-4, atol=1e-5)
+
+
+def test_memory_is_logN():
+    """The checkpoint arrays allocated by the iterative tree are O(depth),
+    not O(2^depth) — lower the jaxpr and inspect buffer shapes."""
+    dim, depth = 8, 10
+    pot = lambda z: 0.5 * jnp.dot(z, z)  # noqa: E731
+    vv_init, vv_update = H.velocity_verlet(pot)
+    z0 = jnp.zeros(dim)
+    pe, grad = vv_init(z0)
+    state = H.IntegratorState(z0, jnp.ones(dim), pe, grad)
+    energy = pe + 0.5 * dim
+    root = H._leaf_tree(state, energy, energy, 1000.0)
+
+    def run(key):
+        return H.iterative_build_subtree(
+            vv_update, jnp.ones(dim), jnp.asarray(0.1), jnp.asarray(True),
+            key, root, jnp.asarray(depth), depth, energy, 1000.0)
+
+    jaxpr = jax.make_jaxpr(run)(random.PRNGKey(0))
+    sizes = [np.prod(v.aval.shape) for eqn in jaxpr.eqns
+             for v in eqn.outvars if v.aval.shape]
+    # largest live buffer must be depth*dim (checkpoints), far below 2^depth
+    assert max(sizes) <= depth * dim * 4, max(sizes)

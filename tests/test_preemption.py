@@ -1,0 +1,53 @@
+"""Fault tolerance: SIGTERM mid-training checkpoints and exits cleanly;
+a relaunch resumes from the preemption step."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+
+@pytest.mark.slow
+def test_sigterm_checkpoints_and_resumes(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    ck = str(tmp_path / "ck")
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+           "mamba2-370m", "--reduced", "--steps", "500", "--seq-len", "64",
+           "--global-batch", "4", "--ckpt-dir", ck, "--log-every", "1",
+           "--checkpoint-every", "1000"]
+    p = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT, text=True)
+    # wait until a few steps have logged, then preempt
+    deadline = time.time() + 300
+    lines = []
+    while time.time() < deadline:
+        line = p.stdout.readline()
+        lines.append(line)
+        if "step 3/" in line:
+            break
+    else:
+        p.kill()
+        pytest.fail("training never reached step 3:\n" + "".join(lines))
+    p.send_signal(signal.SIGTERM)
+    out, _ = p.communicate(timeout=300)
+    lines.append(out)
+    full = "".join(lines)
+    assert "preemption checkpoint" in full, full[-2000:]
+    assert p.returncode == 0
+
+    mf = json.load(open(os.path.join(ck, "manifest.json")))
+    assert mf["extra"]["preempted"] is True
+    step = mf["step"]
+    assert step >= 3
+
+    # relaunch: resumes from the preemption step
+    cmd2 = list(cmd)
+    cmd2[cmd2.index("--steps") + 1] = str(step + 2)
+    out2 = subprocess.run(cmd2, env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert f"resumed from step {step}" in out2.stdout, out2.stdout[-2000:]

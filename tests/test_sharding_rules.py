@@ -1,0 +1,65 @@
+"""distributed.sharding: rule construction and divisibility guards (pure
+logic — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (divisible_partition,
+                                        logical_to_partition, make_rules)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_rules_families():
+    ds = make_rules(get_config("deepseek-v3-671b"), MESH1)
+    assert ds["expert"] == ("data", "model")
+    jb = make_rules(get_config("jamba-v0.1-52b"), MESH1)
+    assert jb["expert"] == ("model",)
+    assert jb["expert_inner"] == "data"
+    dn = make_rules(get_config("qwen3-8b"), MESH2)
+    assert dn["batch"] == ("pod", "data")
+    assert "expert" not in dn
+
+
+def test_seq_parallel_knob():
+    r = make_rules(get_config("qwen3-8b"), MESH1, seq_parallel=False)
+    assert r["seq"] is None
+    r = make_rules(get_config("qwen3-8b"), MESH1)
+    assert r["seq"] == "model"
+
+
+def test_logical_to_partition():
+    rules = make_rules(get_config("qwen3-8b"), MESH1)
+    spec = logical_to_partition(("embed", "mlp"), rules)
+    assert spec == P("data", "model")
+    assert logical_to_partition(None, rules) == P()
+    spec = logical_to_partition((None, "vocab"), rules)
+    assert spec == P(None, "model")
+
+
+def test_divisible_partition_drops_uneven():
+    spec = P("model", "data")
+    out = divisible_partition(spec, (50280, 1024), MESH1)
+    assert out == P(None, "data")          # 50280 % 16 != 0
+    out = divisible_partition(spec, (50288, 1024), MESH1)
+    assert out == P("model", "data")
+    # tuple axes: product must divide
+    out = divisible_partition(P(("data", "model")), (384,), MESH1)
+    assert out == P(None)                  # 384 % 256 != 0
+    out = divisible_partition(P(("data", "model")), (512,), MESH1)
+    assert out == P(("data", "model"))
+
+
+def test_ep_degree_off_mesh_is_one():
+    from repro.distributed.sharding import ep_degree_for
+    assert ep_degree_for(get_config("deepseek-v3-671b")) == 1
