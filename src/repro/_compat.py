@@ -1,0 +1,18 @@
+"""Leaf-level shims for jax API drift, importable from any layer.
+
+This module must stay dependency-free (jax only) so that both the core
+inference stack and the launch layer can use it without inverting the
+core -> models -> distributed -> launch layering.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto, ...)`` kwargs for ``jax.make_mesh`` where
+    supported; jax < 0.4.38 has neither the kwarg nor
+    ``jax.sharding.AxisType`` and Auto is its only behavior."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}

@@ -1,7 +1,15 @@
 # The paper's primary contribution: composable effect handlers + iterative
 # NUTS on a JAX functional core. Handlers live in handlers.py, primitives in
 # primitives.py, distributions in dist/, inference in infer/.
-from . import dist, handlers
+#
+# Import order matters: primitives/handlers form the dist-free effect stack
+# and must initialize first, so that `repro.core` is usable mid-initialization
+# by modules (bayes, infer.*) that do `from . import dist` — by the time dist
+# finishes importing below, both layers are resolvable from sys.modules even
+# if this package's own init hasn't returned yet.
+from . import handlers, primitives
+from . import dist
 from .primitives import deterministic, param, plate, sample
 
-__all__ = ["dist", "handlers", "sample", "param", "deterministic", "plate"]
+__all__ = ["dist", "handlers", "primitives", "sample", "param",
+           "deterministic", "plate"]

@@ -1,0 +1,55 @@
+"""Distribution library: the density layer under the effect-handler stack.
+
+Pyro's layered distribution design on a JAX functional core: a
+:class:`~repro.core.dist.distribution.Distribution` base with
+batch/event-shape semantics, ``expand``/``to_event`` wrappers, callable
+constraint supports, and a ``biject_to`` registry mapping constraints to
+bijections (see ``docs/dist.md`` for the contract inference relies on).
+
+This package must stay import-light and free of intra-``repro.core``
+imports: ``repro.core.__init__`` imports it during initialization, and
+``bayes.py``/``infer/*`` resolve it mid-init via ``from . import dist``.
+"""
+from . import constraints, transforms
+from .continuous import (
+    Beta,
+    Cauchy,
+    Delta,
+    Dirichlet,
+    Exponential,
+    Gamma,
+    HalfCauchy,
+    HalfNormal,
+    InverseGamma,
+    LogNormal,
+    MultivariateNormal,
+    Normal,
+    StudentT,
+)
+from .discrete import Bernoulli, Categorical
+from .distribution import Distribution, ExpandedDistribution, Independent
+from .transforms import biject_to
+
+__all__ = [
+    "Bernoulli",
+    "Beta",
+    "Categorical",
+    "Cauchy",
+    "Delta",
+    "Dirichlet",
+    "Distribution",
+    "ExpandedDistribution",
+    "Exponential",
+    "Gamma",
+    "HalfCauchy",
+    "HalfNormal",
+    "Independent",
+    "InverseGamma",
+    "LogNormal",
+    "MultivariateNormal",
+    "Normal",
+    "StudentT",
+    "biject_to",
+    "constraints",
+    "transforms",
+]

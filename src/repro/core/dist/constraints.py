@@ -1,0 +1,128 @@
+"""Support constraints for distributions.
+
+A :class:`Constraint` is a *callable* predicate: ``constraint(x)`` returns a
+boolean array saying whether ``x`` lies in the support, with the trailing
+``event_dim`` dimensions reduced away (so the result is batch-shaped, like
+``log_prob``).  Constraints double as dispatch keys for
+:func:`repro.core.dist.transforms.biject_to`, which maps each constraint to a
+bijection from unconstrained Euclidean space onto the support — the bridge
+that lets HMC/NUTS run on constrained latents (see ``infer/util.py``).
+
+Everything here is pure ``jax.numpy``, so constraint checks are themselves
+``jit``/``vmap``-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Constraint",
+    "boolean",
+    "integer_interval",
+    "interval",
+    "lower_cholesky",
+    "positive",
+    "positive_vector",
+    "real",
+    "real_vector",
+    "simplex",
+    "unit_interval",
+]
+
+
+class Constraint:
+    """Base class.  ``event_dim`` is the number of trailing dimensions that
+    form a single constrained *event* (0 for scalar constraints, 1 for
+    vector-valued ones like ``simplex``, 2 for matrix-valued ones)."""
+
+    event_dim = 0
+
+    def __call__(self, x):
+        raise NotImplementedError
+
+    def __repr__(self):
+        return self.__class__.__name__.lstrip("_")
+
+
+class _Real(Constraint):
+    def __call__(self, x):
+        return jnp.isfinite(x)
+
+
+class _RealVector(Constraint):
+    event_dim = 1
+
+    def __call__(self, x):
+        return jnp.all(jnp.isfinite(x), axis=-1)
+
+
+class _Positive(Constraint):
+    def __call__(self, x):
+        return x > 0
+
+
+class _PositiveVector(_Positive):
+    event_dim = 1
+
+    def __call__(self, x):
+        return jnp.all(x > 0, axis=-1)
+
+
+class _Interval(Constraint):
+    def __init__(self, lower_bound, upper_bound):
+        self.lower_bound = lower_bound
+        self.upper_bound = upper_bound
+
+    def __call__(self, x):
+        return (x >= self.lower_bound) & (x <= self.upper_bound)
+
+    def __repr__(self):
+        return f"interval(lower_bound={self.lower_bound}, upper_bound={self.upper_bound})"
+
+
+class _UnitInterval(_Interval):
+    def __init__(self):
+        super().__init__(0.0, 1.0)
+
+
+class _Boolean(Constraint):
+    def __call__(self, x):
+        return (x == 0) | (x == 1)
+
+
+class _IntegerInterval(Constraint):
+    def __init__(self, lower_bound, upper_bound):
+        self.lower_bound = lower_bound
+        self.upper_bound = upper_bound
+
+    def __call__(self, x):
+        return (x >= self.lower_bound) & (x <= self.upper_bound) & (x == jnp.floor(x))
+
+
+class _Simplex(Constraint):
+    event_dim = 1
+
+    def __call__(self, x):
+        return jnp.all(x >= 0, axis=-1) & (jnp.abs(jnp.sum(x, axis=-1) - 1.0) < 1e-5)
+
+
+class _LowerCholesky(Constraint):
+    event_dim = 2
+
+    def __call__(self, x):
+        tril = jnp.all(jnp.abs(jnp.triu(x, 1)) < 1e-6, axis=(-2, -1))
+        pos_diag = jnp.all(jnp.diagonal(x, axis1=-2, axis2=-1) > 0, axis=-1)
+        return tril & pos_diag
+
+
+# singleton instances (the usual spelling at call sites)
+real = _Real()
+real_vector = _RealVector()
+positive = _Positive()
+positive_vector = _PositiveVector()
+unit_interval = _UnitInterval()
+boolean = _Boolean()
+simplex = _Simplex()
+lower_cholesky = _LowerCholesky()
+interval = _Interval
+integer_interval = _IntegerInterval

@@ -1,0 +1,91 @@
+"""Discrete distributions (Bernoulli, Categorical).
+
+Both accept either ``probs`` or ``logits`` (exactly one) and compute
+``log_prob`` in logit space for numerical stability.  Their supports are
+discrete constraints with no ``biject_to`` bijection: use them as observed
+sites or marginalize (see ``benchmarks/models.py``'s collapsed HMM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import constraints
+from .distribution import Distribution
+
+
+def _clip_probs(probs):
+    eps = jnp.finfo(jnp.result_type(probs, jnp.float32)).eps
+    return jnp.clip(probs, eps, 1.0 - eps)
+
+
+class Bernoulli(Distribution):
+    arg_constraints = {"probs": constraints.unit_interval,
+                       "logits": constraints.real}
+    support = constraints.boolean
+
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("provide exactly one of probs, logits")
+        self.probs = probs
+        self.logits = logits
+        param = probs if probs is not None else logits
+        super().__init__(jnp.shape(param))
+
+    def _logits(self):
+        if self.logits is not None:
+            return self.logits
+        p = _clip_probs(self.probs)
+        return jnp.log(p) - jnp.log1p(-p)
+
+    def _probs(self):
+        if self.probs is not None:
+            return self.probs
+        return jax.nn.sigmoid(self.logits)
+
+    def sample(self, rng_key=None, sample_shape=()):
+        draws = jax.random.bernoulli(rng_key, self._probs(),
+                                     self.shape(sample_shape))
+        return draws.astype(jnp.int32)
+
+    def log_prob(self, value):
+        logits = self._logits()
+        return value * logits - jax.nn.softplus(logits)
+
+
+class Categorical(Distribution):
+    arg_constraints = {"probs": constraints.simplex,
+                       "logits": constraints.real_vector}
+
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("provide exactly one of probs, logits")
+        self.probs = probs
+        self.logits = logits
+        param = probs if probs is not None else logits
+        shape = jnp.shape(param)
+        if len(shape) < 1:
+            raise ValueError("Categorical parameters must be at least 1-d")
+        self._num_categories = shape[-1]
+        super().__init__(shape[:-1])
+
+    @property
+    def support(self):
+        return constraints.integer_interval(0, self._num_categories - 1)
+
+    def _logits(self):
+        if self.logits is not None:
+            return self.logits
+        return jnp.log(_clip_probs(self.probs))
+
+    def sample(self, rng_key=None, sample_shape=()):
+        return jax.random.categorical(rng_key, self._logits(),
+                                      shape=self.shape(sample_shape))
+
+    def log_prob(self, value):
+        log_pmf = jax.nn.log_softmax(self._logits(), axis=-1)
+        value = jnp.asarray(value, jnp.int32)
+        batch = jnp.broadcast_shapes(jnp.shape(value), self.batch_shape)
+        log_pmf = jnp.broadcast_to(log_pmf, batch + (self._num_categories,))
+        value = jnp.broadcast_to(value, batch)
+        return jnp.take_along_axis(log_pmf, value[..., None], axis=-1)[..., 0]

@@ -1,0 +1,216 @@
+"""Distribution base class plus the Independent / ExpandedDistribution
+wrappers.
+
+Design contract (consumed by ``primitives.py``, ``handlers.py`` and
+``infer/``):
+
+- ``d.batch_shape`` / ``d.event_shape``: batch dims broadcast, event dims are
+  a single draw.  ``d.log_prob(x)`` returns a ``batch_shape`` array.
+- ``d.sample(rng_key, sample_shape)`` draws ``sample_shape + batch_shape +
+  event_shape``; calling ``d(rng_key=..., sample_shape=...)`` aliases it
+  (``default_process_message`` invokes the site fn directly).
+- ``d.support`` is a callable :class:`~repro.core.dist.constraints.Constraint`
+  and the dispatch key for ``biject_to``.
+- ``d.expand(shape)`` broadcasts batch dims (plates call this); ``d.to_event(n)``
+  reinterprets the rightmost ``n`` batch dims as event dims.
+
+Every subclass is automatically registered as a JAX pytree whose leaves are
+its parameters, so distributions can cross ``jit``/``vmap``/``lax`` boundaries
+and live inside carried state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import constraints
+
+
+class Distribution:
+    # parameter name -> constraint; ordering fixes the pytree leaf order and
+    # the constraint's event_dim tells ``expand`` which trailing dims of a
+    # parameter belong to the event (e.g. Dirichlet concentration).
+    arg_constraints: dict = {}
+    support: Optional[constraints.Constraint] = None
+    pytree_aux_fields: Tuple[str, ...] = ()
+
+    def __init__(self, batch_shape=(), event_shape=()):
+        self._batch_shape = tuple(batch_shape)
+        self._event_shape = tuple(event_shape)
+
+    def __init_subclass__(cls, **kwargs):
+        super().__init_subclass__(**kwargs)
+        jax.tree_util.register_pytree_node(
+            cls, cls.tree_flatten, cls.tree_unflatten)
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten(self):
+        children = tuple(getattr(self, name) for name in self.arg_constraints)
+        aux = tuple(getattr(self, name) for name in self.pytree_aux_fields)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kwargs = dict(zip(cls.arg_constraints, children))
+        kwargs.update(zip(cls.pytree_aux_fields, aux))
+        return cls(**kwargs)
+
+    # -- shapes --------------------------------------------------------------
+    @property
+    def batch_shape(self):
+        return self._batch_shape
+
+    @property
+    def event_shape(self):
+        return self._event_shape
+
+    @property
+    def event_dim(self):
+        return len(self._event_shape)
+
+    def shape(self, sample_shape=()):
+        return tuple(sample_shape) + self._batch_shape + self._event_shape
+
+    # -- core API ------------------------------------------------------------
+    def sample(self, rng_key=None, sample_shape=()):
+        raise NotImplementedError
+
+    def log_prob(self, value):
+        raise NotImplementedError
+
+    def __call__(self, *args, rng_key=None, sample_shape=(), **kwargs):
+        return self.sample(rng_key=rng_key, sample_shape=sample_shape)
+
+    def expand(self, batch_shape):
+        """Broadcast to ``batch_shape`` by broadcasting every parameter
+        (draws along expanded dims are independent)."""
+        batch_shape = tuple(batch_shape)
+        if batch_shape == self._batch_shape:
+            return self
+        new_params = {}
+        for name, constraint in self.arg_constraints.items():
+            value = getattr(self, name)
+            if value is None:
+                new_params[name] = None
+                continue
+            shape = jnp.shape(value)
+            event_ndim = constraint.event_dim
+            event_part = shape[len(shape) - event_ndim:] if event_ndim else ()
+            new_params[name] = jnp.broadcast_to(value, batch_shape + event_part)
+        new_params.update(
+            {name: getattr(self, name) for name in self.pytree_aux_fields})
+        return type(self)(**new_params)
+
+    def to_event(self, reinterpreted_batch_ndims=None):
+        if reinterpreted_batch_ndims is None:
+            reinterpreted_batch_ndims = len(self._batch_shape)
+        if reinterpreted_batch_ndims == 0:
+            return self
+        return Independent(self, reinterpreted_batch_ndims)
+
+    def __repr__(self):
+        params = ", ".join(f"{k}={getattr(self, k)!r}"
+                           for k in self.arg_constraints
+                           if getattr(self, k) is not None)
+        return f"{type(self).__name__}({params})"
+
+
+class Independent(Distribution):
+    """Reinterpret the rightmost ``reinterpreted_batch_ndims`` batch dims of
+    ``base_dist`` as event dims: ``log_prob`` sums over them (Pyro's
+    ``.to_event``)."""
+
+    def __init__(self, base_dist, reinterpreted_batch_ndims):
+        if reinterpreted_batch_ndims > len(base_dist.batch_shape):
+            raise ValueError(
+                f"cannot reinterpret {reinterpreted_batch_ndims} batch dims "
+                f"of a distribution with batch_shape {base_dist.batch_shape}")
+        self.base_dist = base_dist
+        self.reinterpreted_batch_ndims = reinterpreted_batch_ndims
+        shape = base_dist.batch_shape + base_dist.event_shape
+        split = len(base_dist.batch_shape) - reinterpreted_batch_ndims
+        super().__init__(shape[:split], shape[split:])
+
+    def tree_flatten(self):
+        return (self.base_dist,), (self.reinterpreted_batch_ndims,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def support(self):
+        return self.base_dist.support
+
+    def sample(self, rng_key=None, sample_shape=()):
+        return self.base_dist.sample(rng_key=rng_key,
+                                     sample_shape=sample_shape)
+
+    def log_prob(self, value):
+        log_prob = self.base_dist.log_prob(value)
+        axes = tuple(range(-self.reinterpreted_batch_ndims, 0))
+        return jnp.sum(log_prob, axis=axes)
+
+    def expand(self, batch_shape):
+        batch_shape = tuple(batch_shape)
+        base_batch = self.base_dist.batch_shape
+        reinterpreted = base_batch[len(base_batch)
+                                   - self.reinterpreted_batch_ndims:]
+        return Independent(self.base_dist.expand(batch_shape + reinterpreted),
+                           self.reinterpreted_batch_ndims)
+
+    def to_event(self, reinterpreted_batch_ndims=None):
+        if reinterpreted_batch_ndims is None:
+            reinterpreted_batch_ndims = len(self.batch_shape)
+        if reinterpreted_batch_ndims == 0:
+            return self
+        return Independent(
+            self.base_dist,
+            self.reinterpreted_batch_ndims + reinterpreted_batch_ndims)
+
+
+class ExpandedDistribution(Distribution):
+    """Generic batch-broadcast wrapper: used as the ``expand`` fallback for
+    distributions whose parameters cannot simply be broadcast (e.g. Delta
+    with an attached density).  Expanded dims draw independent samples."""
+
+    def __init__(self, base_dist, batch_shape=()):
+        batch_shape = tuple(batch_shape)
+        # validate eagerly for a clear error site: the target must be a
+        # broadcast superset of the base batch shape, or sample/log_prob
+        # shapes would silently disagree with self.batch_shape
+        if jnp.broadcast_shapes(batch_shape,
+                                base_dist.batch_shape) != batch_shape:
+            raise ValueError(
+                f"cannot expand batch_shape {base_dist.batch_shape} "
+                f"to {batch_shape}")
+        self.base_dist = base_dist
+        super().__init__(batch_shape, base_dist.event_shape)
+
+    def tree_flatten(self):
+        return (self.base_dist,), (self._batch_shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def support(self):
+        return self.base_dist.support
+
+    def sample(self, rng_key=None, sample_shape=()):
+        lead = self._batch_shape[:len(self._batch_shape)
+                                 - len(self.base_dist.batch_shape)]
+        value = self.base_dist.sample(rng_key=rng_key,
+                                      sample_shape=tuple(sample_shape) + lead)
+        return jnp.broadcast_to(value, self.shape(sample_shape))
+
+    def log_prob(self, value):
+        log_prob = self.base_dist.log_prob(value)
+        shape = jnp.broadcast_shapes(jnp.shape(log_prob), self._batch_shape)
+        return jnp.broadcast_to(log_prob, shape)
+
+    def expand(self, batch_shape):
+        return ExpandedDistribution(self.base_dist, tuple(batch_shape))

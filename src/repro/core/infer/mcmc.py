@@ -109,10 +109,11 @@ class MCMC:
                     n_dev = len(jax.devices())
                     use = max(d for d in range(1, n_dev + 1)
                               if self.num_chains % d == 0)
+                    from repro._compat import make_mesh_axis_kwargs
                     mesh = jax.make_mesh(
                         (use,), ("chains",),
-                        axis_types=(jax.sharding.AxisType.Auto,),
-                        devices=jax.devices()[:use])
+                        devices=jax.devices()[:use],
+                        **make_mesh_axis_kwargs(1))
                     from jax.sharding import NamedSharding, PartitionSpec
                     keys = jax.device_put(
                         keys, NamedSharding(mesh, PartitionSpec("chains")))

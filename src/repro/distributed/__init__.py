@@ -1,3 +1,26 @@
-from . import checkpoint, sharding
+"""Distributed runtime: sharding rules, checkpointing, elastic restarts.
 
-__all__ = ["checkpoint", "sharding"]
+Submodules are loaded lazily (PEP 562): ``checkpoint`` pulls in the JAX
+array machinery and ``sharding`` historically dragged the whole model zoo
+(and through it ``repro.core``) into any test that only wanted the pure
+rule logic.  Deferring the imports keeps ``import repro.distributed`` —
+and collection of lightweight tests like ``test_sharding_rules.py`` —
+free of that cost.
+"""
+from importlib import import_module
+
+_SUBMODULES = ("checkpoint", "sharding")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        module = import_module(f".{name}", __name__)
+        globals()[name] = module
+        return module
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

@@ -19,12 +19,14 @@ multi-pod ``(pod=2, data=16, model=16)``.  Design (DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.models.config import ModelConfig
+if TYPE_CHECKING:  # annotation-only: importing repro.models at runtime
+    # would pull the whole zoo (and repro.core) into pure-logic callers
+    from repro.models.config import ModelConfig
 
 DP_AXES_1POD = ("data",)
 DP_AXES_MPOD = ("pod", "data")

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro._compat import make_mesh_axis_kwargs as auto_axis_kwargs
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
@@ -15,9 +17,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     the DCN and carries only data-parallel gradient reductions."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -25,5 +25,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n // 2, 2) if n % 2 == 0 and n > 1 else (n, 1)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(len(axes)))

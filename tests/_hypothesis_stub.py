@@ -1,0 +1,103 @@
+"""Minimal stand-in for `hypothesis`, used only when the real package is
+absent (hermetic CI images).  Implements exactly the surface
+``test_distributions.py`` uses — ``given``/``settings`` decorators and the
+``floats``/``integers``/``data`` strategies — with deterministic seeded
+draws instead of hypothesis' adaptive search.  When the real hypothesis is
+installed, ``conftest.py`` never activates this module.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng):
+        return self._draw_fn(rng)
+
+
+def floats(min_value, max_value, allow_nan=None, allow_infinity=None,
+           width=64, allow_subnormal=None):
+    def draw(rng):
+        x = rng.uniform(min_value, max_value)
+        return float(np.float32(x)) if width == 32 else float(x)
+    return Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value,
+                                                 endpoint=True)))
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: None)
+
+
+def data():
+    return _DataStrategy()
+
+
+class DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+def settings(max_examples=100, deadline=None, **kwargs):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def given(*args, **strategies):
+    if args:
+        raise TypeError("hypothesis stub supports keyword strategies only")
+
+    def decorate(fn):
+        signature = inspect.signature(fn)
+        passthrough = [p for name, p in signature.parameters.items()
+                       if name not in strategies]
+
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            max_examples = getattr(wrapper, "_stub_max_examples", 100)
+            for example in range(max_examples):
+                rng = np.random.default_rng(0xC0FFEE + 7919 * example)
+                drawn = {}
+                for name, strategy in strategies.items():
+                    if isinstance(strategy, _DataStrategy):
+                        drawn[name] = DataObject(rng)
+                    else:
+                        drawn[name] = strategy.draw(rng)
+                fn(*call_args, **call_kwargs, **drawn)
+
+        # hide the strategy-provided params from pytest's fixture resolution
+        wrapper.__signature__ = signature.replace(parameters=passthrough)
+        return wrapper
+
+    return decorate
+
+
+def install():
+    """Register stub ``hypothesis`` and ``hypothesis.strategies`` modules."""
+    hypothesis_mod = types.ModuleType("hypothesis")
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "data"):
+        setattr(strategies_mod, name, globals()[name])
+    hypothesis_mod.given = given
+    hypothesis_mod.settings = settings
+    hypothesis_mod.strategies = strategies_mod
+    hypothesis_mod.__stub__ = True
+    sys.modules["hypothesis"] = hypothesis_mod
+    sys.modules["hypothesis.strategies"] = strategies_mod

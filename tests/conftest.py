@@ -1,0 +1,12 @@
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # hermetic image without hypothesis: activate the deterministic stub so
+    # the property suite still runs (see _hypothesis_stub.py)
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()

@@ -1,0 +1,127 @@
+"""Golden log_prob checks against scipy.stats closed forms, plus
+jit/vmap/pytree compile-behavior smoke tests for the distribution layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as sps
+from jax import random
+
+from repro.core import dist
+
+POSITIVE_X = np.array([0.05, 0.4, 1.0, 2.5, 7.0])
+REAL_X = np.array([-2.5, -0.3, 0.0, 0.7, 3.1])
+UNIT_X = np.array([0.05, 0.3, 0.5, 0.8, 0.97])
+
+GOLDEN = [
+    ("Normal", dist.Normal(0.5, 1.3), sps.norm(0.5, 1.3), REAL_X),
+    ("LogNormal", dist.LogNormal(0.2, 0.8),
+     sps.lognorm(s=0.8, scale=np.exp(0.2)), POSITIVE_X),
+    ("Cauchy", dist.Cauchy(-0.3, 2.0), sps.cauchy(-0.3, 2.0), REAL_X),
+    ("StudentT", dist.StudentT(3.5, 0.5, 2.0),
+     sps.t(3.5, loc=0.5, scale=2.0), REAL_X),
+    ("Gamma", dist.Gamma(2.5, 3.0), sps.gamma(2.5, scale=1 / 3.0),
+     POSITIVE_X),
+    ("Beta", dist.Beta(2.0, 5.0), sps.beta(2.0, 5.0), UNIT_X),
+    ("Exponential", dist.Exponential(1.7), sps.expon(scale=1 / 1.7),
+     POSITIVE_X),
+    ("HalfNormal", dist.HalfNormal(2.0), sps.halfnorm(scale=2.0),
+     POSITIVE_X),
+    ("HalfCauchy", dist.HalfCauchy(2.0), sps.halfcauchy(scale=2.0),
+     POSITIVE_X),
+    ("InverseGamma", dist.InverseGamma(3.0, 2.0),
+     sps.invgamma(3.0, scale=2.0), POSITIVE_X),
+]
+
+
+@pytest.mark.parametrize("name,d,ref,xs", GOLDEN,
+                         ids=[g[0] for g in GOLDEN])
+def test_log_prob_matches_scipy(name, d, ref, xs):
+    ours = np.asarray(d.log_prob(jnp.asarray(xs, jnp.float32)))
+    np.testing.assert_allclose(ours, ref.logpdf(xs), rtol=2e-5, atol=2e-5)
+
+
+def test_dirichlet_log_prob_matches_scipy():
+    conc = np.array([0.7, 1.5, 3.0])
+    x = np.array([0.2, 0.3, 0.5])
+    ours = float(dist.Dirichlet(jnp.asarray(conc)).log_prob(jnp.asarray(x)))
+    assert abs(ours - sps.dirichlet(conc).logpdf(x)) < 1e-4
+
+
+def test_mvn_log_prob_matches_scipy():
+    cov = np.array([[2.0, 0.4], [0.4, 1.0]])
+    loc = np.array([1.0, -0.5])
+    x = np.array([[0.0, 0.0], [1.5, -1.0]])
+    d = dist.MultivariateNormal(jnp.asarray(loc),
+                                covariance_matrix=jnp.asarray(cov))
+    np.testing.assert_allclose(
+        np.asarray(d.log_prob(jnp.asarray(x))),
+        sps.multivariate_normal(loc, cov).logpdf(x), rtol=1e-4)
+
+
+def test_discrete_log_prob_matches_scipy():
+    p = 0.3
+    xs = np.array([0, 1, 1, 0])
+    ours = np.asarray(dist.Bernoulli(probs=p).log_prob(jnp.asarray(xs)))
+    np.testing.assert_allclose(ours, sps.bernoulli(p).logpmf(xs), rtol=1e-5)
+
+    probs = np.array([0.2, 0.5, 0.3])
+    ks = np.array([0, 1, 2, 1])
+    ours = np.asarray(
+        dist.Categorical(probs=jnp.asarray(probs)).log_prob(jnp.asarray(ks)))
+    np.testing.assert_allclose(
+        ours, sps.rv_discrete(values=(np.arange(3), probs)).logpmf(ks),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_jit_vmap_log_prob_compiles_once():
+    """log_prob under jit(vmap(...)) traces exactly once across repeated
+    calls with fresh (same-shaped) inputs — no hidden Python state in the
+    distribution layer triggers retracing."""
+    n_traces = 0
+
+    def lp(loc, scale, x):
+        nonlocal n_traces
+        n_traces += 1
+        return dist.Normal(loc, scale).to_event(1).log_prob(x)
+
+    f = jax.jit(jax.vmap(lp))
+    locs = jnp.zeros((4, 3))
+    scales = jnp.ones((4, 3))
+    xs = random.normal(random.PRNGKey(0), (4, 3))
+    first = f(locs, scales, xs)
+    second = f(locs + 1.0, scales, xs)  # same shapes: must hit the cache
+    assert n_traces == 1
+    assert first.shape == second.shape == (4,)
+
+
+def test_distribution_is_pytree():
+    """Distributions cross jit boundaries as pytrees: params are leaves."""
+    d = dist.Normal(jnp.arange(3.0), jnp.ones(3))
+    leaves = jax.tree_util.tree_leaves(d)
+    assert len(leaves) == 2
+
+    @jax.jit
+    def through(dd, x):
+        return dd.log_prob(x)
+
+    out = through(d, jnp.zeros(3))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(d.log_prob(jnp.zeros(3))), rtol=1e-6)
+
+    # vmap over a batch of distributions
+    batched = dist.Normal(jnp.zeros((5, 2)), jnp.ones((5, 2)))
+    out = jax.vmap(lambda dd, x: dd.log_prob(x))(batched, jnp.zeros((5, 2)))
+    assert out.shape == (5, 2)
+
+
+def test_expand_draws_iid():
+    d = dist.Normal(0.0, 1.0).expand((1000,))
+    assert d.batch_shape == (1000,)
+    x = d.sample(rng_key=random.PRNGKey(0))
+    assert x.shape == (1000,)
+    assert float(jnp.std(x)) > 0.5  # iid draws, not a broadcast copy
+
+    e = dist.ExpandedDistribution(dist.Normal(0.0, 1.0), (1000,))
+    x = e.sample(rng_key=random.PRNGKey(0))
+    assert x.shape == (1000,) and float(jnp.std(x)) > 0.5
