@@ -11,13 +11,37 @@ import time
 RESULTS = "benchmarks/results"
 
 
+def _previous_headlines():
+    """Headline metrics of the last recorded run, carried forward into the
+    new summary so each bench_summary.json shows before/after per PR."""
+    path = os.path.join(RESULTS, "bench_summary.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+    except Exception:
+        return None
+    keep = {}
+    for k in ("hmm", "logreg", "skim"):
+        if isinstance(prev.get(k), dict):
+            keep[k] = {m: prev[k][m]
+                       for m in ("ms_per_leapfrog", "ms_per_eff_sample",
+                                 "wall_s")
+                       if m in prev[k]}
+    if isinstance(prev.get("multichain"), dict):
+        keep["multichain"] = {"rows": prev["multichain"].get("rows")}
+    return keep or None
+
+
 def main():
     quick = "--quick" in sys.argv or os.environ.get("BENCH_QUICK") == "1"
     os.makedirs(RESULTS, exist_ok=True)
     t0 = time.time()
     out = {}
+    previous = _previous_headlines()
 
-    from benchmarks import hmm, logreg, skim
+    from benchmarks import hmm, logreg, multichain, skim
     print("=" * 70)
     print("Table 2a — HMM (time per leapfrog step)")
     print("=" * 70, flush=True)
@@ -27,6 +51,11 @@ def main():
     print("Table 2a — logistic regression / CoverType-shaped")
     print("=" * 70, flush=True)
     out["logreg"] = logreg.main(quick=quick)
+
+    print("=" * 70)
+    print("Multi-chain throughput (chains × samples/sec, vmap executor)")
+    print("=" * 70, flush=True)
+    out["multichain"] = multichain.main(quick=quick)
 
     print("=" * 70)
     print("Fig 2b — SKIM time per effective sample vs p")
@@ -44,6 +73,8 @@ def main():
         print(f"[roofline skipped: {e}]")
 
     out["total_wall_s"] = time.time() - t0
+    if previous is not None:
+        out["previous"] = previous
     with open(os.path.join(RESULTS, "bench_summary.json"), "w") as f:
         json.dump(out, f, indent=1)
     print(f"\nall benchmarks done in {out['total_wall_s']:.0f}s; summary in "

@@ -1,19 +1,23 @@
-"""Quickstart: the paper's Figure 1 / Appendix B end to end.
+"""Quickstart: the paper's Figure 1 / Appendix B end to end, on the
+pure-functional kernel API.
 
-Logistic regression -> iterative-NUTS inference -> vmap'd prior predictive,
-posterior predictive, and log-likelihood, composing `seed`/`trace`/
-`condition` handlers with `vmap` (the paper's core demonstration).
+Logistic regression -> iterative-NUTS inference (a ``KernelSetup`` whose
+``init``/``sample`` are pure functions, so the whole chain is one explicit
+``lax.scan``) -> vmap'd prior predictive, posterior predictive, and
+log-likelihood, composing `seed`/`trace`/`condition` handlers with `vmap`
+(the paper's core demonstration).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import jax.numpy as jnp
-from jax import random, vmap
+from jax import lax, random, vmap
 from jax.scipy.special import logsumexp
 
 import repro.core as pc
 from repro.core import dist
 from repro.core.handlers import condition, seed, trace
-from repro.core.infer import MCMC, NUTS, print_summary
+from repro.core.infer import init_state, nuts_setup, print_summary, sample
 
 
 def logistic_regression(x, y=None):
@@ -41,12 +45,31 @@ def main():
     y = dist.Bernoulli(logits=x @ true_coefs).sample(
         rng_key=random.PRNGKey(3))
 
-    # inference: end-to-end JIT-compiled iterative NUTS
+    # inference on the functional kernel API: `setup` is the static half
+    # (model trace, potential closure, adaptation schedule); the chain state
+    # is an explicit pytree and init/sample are pure, so warmup + sampling
+    # below is one jit'd lax.scan — and batching chains is just vmap.
     num_warmup, num_samples = 500, 500
-    mcmc = MCMC(NUTS(logistic_regression), num_warmup, num_samples)
-    mcmc.run(random.PRNGKey(1), x, y=y)
-    samples = mcmc.get_samples()
-    print_summary(mcmc.get_samples(group_by_chain=True))
+    setup = nuts_setup(random.PRNGKey(1), num_warmup,
+                       model=logistic_regression, model_args=(x,),
+                       model_kwargs={"y": y})
+
+    @jax.jit
+    def run_chain(key):
+        state = init_state(setup, key)
+        state = lax.scan(lambda s, _: (sample(setup, s), None), state,
+                         None, length=num_warmup)[0]
+
+        def body(s, _):
+            s = sample(setup, s)
+            return s, s.z
+
+        _, zs = lax.scan(body, state, None, length=num_samples)
+        return zs
+
+    zs = run_chain(random.PRNGKey(1))                    # (samples, D) flat
+    samples = vmap(setup.constrain_fn)(zs)               # site-keyed dict
+    print_summary(jax.tree_util.tree_map(lambda v: v[None], samples))
 
     # vectorized prediction & log likelihood (paper Fig 1c)
     rngs_sim = random.split(random.PRNGKey(2), num_samples)

@@ -6,13 +6,24 @@ from .diagnostics import (
     print_summary,
     summary,
 )
-from .hmc import HMC, NUTS, HMCState
+from .hmc import (
+    HMC,
+    NUTS,
+    HMCState,
+    hmc_init,
+    hmc_setup,
+    nuts_init,
+    nuts_setup,
+)
+from .kernel_api import KernelSetup, SamplerKernel, init_state, sample
 from .mcmc import MCMC
 from .svi import SVI, SVIState, Trace_ELBO
 from .util import (
     Predictive,
     constrain_fn,
     initialize_model,
+    initialize_model_structure,
+    find_valid_initial_params,
     log_density,
     log_likelihood,
     potential_energy,
@@ -21,8 +32,11 @@ from .util import (
 
 __all__ = [
     "HMC", "NUTS", "HMCState", "MCMC", "SVI", "SVIState", "Trace_ELBO",
+    "KernelSetup", "SamplerKernel", "init_state", "sample",
+    "hmc_setup", "hmc_init", "nuts_setup", "nuts_init",
     "AutoNormal", "Predictive", "log_density", "log_likelihood",
     "potential_energy", "transform_fn", "constrain_fn", "initialize_model",
+    "initialize_model_structure", "find_valid_initial_params",
     "effective_sample_size", "gelman_rubin", "hpdi", "summary",
     "print_summary",
 ]

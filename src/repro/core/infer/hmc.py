@@ -1,13 +1,22 @@
-"""HMC and NUTS kernels with Stan-style windowed warmup adaptation.
+"""HMC and NUTS as pure functional sampler kernels.
 
-Both kernels are pure functions of their state, so a whole chain — warmup
-adaptation included — compiles to a single XLA program (``lax.scan`` over
-``sample_kernel``).  This is the end-to-end-JIT property the paper
-demonstrates (Sec. 3.1).
+The functional core is :func:`hmc_setup`: it performs the one-time
+Python-level work (tracing the model, building the flat-space potential and
+the Stan-style windowed adaptation schedule) and returns a static
+:class:`~repro.core.infer.kernel_api.KernelSetup` whose ``init_fn`` /
+``sample_fn`` are *pure* — a whole chain (warmup adaptation included)
+compiles to a single XLA program (``lax.scan`` over ``sample_fn``), and a
+batch of chains is just ``vmap`` over ``init_fn``/``sample_fn``.  This is
+the end-to-end-JIT property the paper demonstrates (Sec. 3.1), now with the
+state/closure split BlackJAX showed unlocks composition at scale.
+
+The classic class-based API (``HMC``/``NUTS`` with ``.init(state)`` /
+``.sample(state)``) survives as a thin wrapper over the functional core —
+see ``docs/inference.md`` for the migration note.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +25,6 @@ from jax import lax
 from .hmc_util import (
     DAState,
     IntegratorState,
-    TreeState,
     WelfordState,
     build_adaptation_schedule,
     build_tree,
@@ -30,7 +38,11 @@ from .hmc_util import (
     welford_init,
     welford_update,
 )
-from .util import initialize_model
+from .kernel_api import KernelSetup
+from .util import (
+    find_valid_initial_params,
+    initialize_model_structure,
+)
 
 
 class AdaptState(NamedTuple):
@@ -55,127 +67,98 @@ class HMCState(NamedTuple):
     rng_key: jnp.ndarray
 
 
-class HMC:
-    """Vanilla HMC with fixed/jittered trajectory length."""
+# ---------------------------------------------------------------------------
+# pure closures
+# ---------------------------------------------------------------------------
 
-    def __init__(self, model=None, potential_fn=None, step_size=1.0,
-                 trajectory_length=2 * jnp.pi, adapt_step_size=True,
-                 adapt_mass_matrix=True, dense_mass=False,
-                 target_accept_prob=0.8, init_strategy="uniform"):
-        self.model = model
-        self.potential_fn = potential_fn
-        self._step_size = step_size
-        self._trajectory_length = trajectory_length
-        self._adapt_step_size = adapt_step_size
-        self._adapt_mass_matrix = adapt_mass_matrix
-        self._dense_mass = dense_mass
-        self._target = target_accept_prob
-        self._init_strategy = init_strategy
-        self._algo = "HMC"
-        self._max_tree_depth = 10
+def _make_init_fn(potential_fn, dim, num_warmup, *, z_fixed, adapt_step_size,
+                  dense_mass, step_size0, init_strategy, model, model_args,
+                  model_kwargs, transforms):
+    """Pure per-chain state init: initial-point search (unless ``z_fixed``),
+    reasonable-step-size search, adaptation bootstrap.  Vmappable."""
 
-    # -- setup ---------------------------------------------------------------
-    def init(self, rng_key, num_warmup, init_params=None, model_args=(),
-             model_kwargs=None):
-        model_kwargs = model_kwargs or {}
-        if self.model is not None:
-            (z, pot_fn, unravel, transforms, constrain, tr) = initialize_model(
-                rng_key, self.model, model_args, model_kwargs,
-                init_strategy=self._init_strategy)
-            self.potential_fn = pot_fn
-            self._unravel_fn = unravel
-            self._constrain_fn = constrain
-            if init_params is not None:
-                from jax.flatten_util import ravel_pytree
-                z = ravel_pytree({k: transforms[k].inv(v)
-                                  for k, v in init_params.items()})[0]
+    def init_fn(rng_key):
+        rng_key, init_key, ss_key = jax.random.split(rng_key, 3)
+        if z_fixed is not None:
+            z = z_fixed
+            pe, grad = jax.value_and_grad(potential_fn)(z)
         else:
-            if init_params is None:
-                raise ValueError("potential_fn mode requires init_params")
-            from jax.flatten_util import ravel_pytree
-            z, unravel = ravel_pytree(init_params)
-            self._unravel_fn = unravel
-            self._constrain_fn = unravel
+            z, pe, grad = find_valid_initial_params(
+                init_key, potential_fn, jnp.zeros((dim,)),
+                init_strategy=init_strategy, model=model,
+                model_args=model_args, model_kwargs=model_kwargs,
+                transforms=transforms)
 
-        self._num_warmup = num_warmup
-        d = z.shape[0]
-        imm = (jnp.ones(d) if not self._dense_mass else jnp.eye(d))
-        pe, grad = jax.value_and_grad(self.potential_fn)(z)
-
-        rng_key, ss_key = jax.random.split(rng_key)
-        if self._adapt_step_size:
+        imm = (jnp.ones(dim) if not dense_mass else jnp.eye(dim))
+        if adapt_step_size:
             step_size = find_reasonable_step_size(
-                self.potential_fn, imm, z, pe, grad, ss_key,
-                init_step_size=self._step_size)
+                potential_fn, imm, z, pe, grad, ss_key,
+                init_step_size=step_size0)
         else:
-            step_size = jnp.asarray(self._step_size, jnp.float32)
+            step_size = jnp.asarray(step_size0, jnp.float32)
 
         da = dual_averaging_init(jnp.log(step_size))
-        wf = welford_init(d, diagonal=not self._dense_mass)
-        adapt = AdaptState(step_size, imm, da, wf,
-                           jnp.zeros((), jnp.int32))
-
-        self._schedule = build_adaptation_schedule(num_warmup)
-        # window-end table for jittable lookup
-        self._window_ends = jnp.asarray(
-            [e for (_, e) in self._schedule], jnp.int32)
-        self._is_middle = jnp.asarray(
-            [1 if 0 < i < len(self._schedule) - 1 else 0
-             for i in range(len(self._schedule))], jnp.int32) \
-            if len(self._schedule) > 2 else jnp.zeros(
-                (max(len(self._schedule), 1),), jnp.int32)
-
+        wf = welford_init(dim, diagonal=not dense_mass)
+        adapt = AdaptState(step_size, imm, da, wf, jnp.zeros((), jnp.int32))
         return HMCState(
-            i=jnp.zeros((), jnp.int32), z=z, potential_energy=pe, z_grad=grad,
-            energy=pe, num_steps=jnp.zeros((), jnp.int32),
+            i=jnp.zeros((), jnp.int32), z=z, potential_energy=pe,
+            z_grad=grad, energy=pe, num_steps=jnp.zeros((), jnp.int32),
             accept_prob=jnp.zeros(()), mean_accept_prob=jnp.zeros(()),
-            diverging=jnp.zeros((), bool), adapt_state=adapt, rng_key=rng_key)
+            diverging=jnp.zeros((), bool), adapt_state=adapt,
+            rng_key=rng_key)
 
-    # -- adaptation ----------------------------------------------------------
-    def _in_middle_window(self, t):
-        # t inside any middle window?
-        if len(self._schedule) <= 2:
+    return init_fn
+
+
+def _make_sample_fn(potential_fn, num_warmup, schedule, *, algo,
+                    trajectory_length, adapt_step_size, adapt_mass_matrix,
+                    dense_mass, target_accept_prob, max_tree_depth):
+    """Pure transition ``HMCState -> HMCState`` with every static ingredient
+    (closures, schedule tables) captured here, never read off an object."""
+    # window tables for jittable schedule lookups
+    window_starts = jnp.asarray([s for (s, _) in schedule] or [0], jnp.int32)
+    window_ends = jnp.asarray([e for (_, e) in schedule] or [0], jnp.int32)
+    has_middle = len(schedule) > 2
+    is_middle = jnp.asarray(
+        [1 if 0 < i < len(schedule) - 1 else 0
+         for i in range(len(schedule))] or [0], jnp.int32).astype(bool)
+
+    def in_middle_window(t):
+        if not has_middle:
             return jnp.zeros((), bool)
-        starts = jnp.asarray([s for (s, _) in self._schedule], jnp.int32)
-        ends = self._window_ends
-        mids = self._is_middle.astype(bool)
-        inside = (t >= starts) & (t <= ends) & mids
-        return inside.any()
+        return ((t >= window_starts) & (t <= window_ends) & is_middle).any()
 
-    def _window_end_is_middle(self, t):
-        if len(self._schedule) <= 2:
+    def window_end_is_middle(t):
+        if not has_middle:
             return jnp.zeros((), bool)
-        ends = self._window_ends
-        mids = self._is_middle.astype(bool)
-        return ((t == ends) & mids).any()
+        return ((t == window_ends) & is_middle).any()
 
-    def _adapt(self, state: HMCState, accept_prob) -> AdaptState:
+    def adapt_update(state: HMCState, accept_prob) -> AdaptState:
         adapt = state.adapt_state
         t = state.i
         # 1) dual averaging on log step size
-        if self._adapt_step_size:
+        if adapt_step_size:
             da = dual_averaging_update(adapt.da_state,
-                                       self._target - accept_prob)
+                                       target_accept_prob - accept_prob)
             step_size = jnp.exp(da.x)
         else:
             da, step_size = adapt.da_state, adapt.step_size
-        if not self._adapt_mass_matrix:
+        if not adapt_mass_matrix:
             return AdaptState(step_size, adapt.inverse_mass_matrix, da,
                               adapt.welford, adapt.window_idx)
         # 2) welford accumulation inside middle windows
-        in_mid = self._in_middle_window(t)
+        in_mid = in_middle_window(t)
         wf = jax.tree_util.tree_map(
             lambda new, old: jnp.where(in_mid, new, old),
             welford_update(adapt.welford, state.z), adapt.welford)
         # 3) at the end of a middle window: refresh the mass matrix,
         #    reset welford, restart dual averaging from the averaged iterate
-        at_end = self._window_end_is_middle(t)
+        at_end = window_end_is_middle(t)
 
         def refresh(_):
             imm = welford_covariance(wf)
-            wf_new = welford_init(state.z.shape[0],
-                                  diagonal=not self._dense_mass)
-            if self._adapt_step_size:
+            wf_new = welford_init(state.z.shape[0], diagonal=not dense_mass)
+            if adapt_step_size:
                 ss = jnp.exp(da.x_avg)
                 da_new = dual_averaging_init(jnp.log(ss))
             else:
@@ -187,33 +170,32 @@ class HMC:
 
         imm, wf, da, step_size = lax.cond(at_end, refresh, keep, None)
         # final step of warmup: freeze averaged step size
-        if self._adapt_step_size:
-            is_last = t == (self._num_warmup - 1)
+        if adapt_step_size:
+            is_last = t == (num_warmup - 1)
             step_size = jnp.where(is_last, jnp.exp(da.x_avg), step_size)
         return AdaptState(step_size, imm, da, wf,
                           adapt.window_idx + at_end.astype(jnp.int32))
 
-    # -- transition ----------------------------------------------------------
-    def _num_leapfrog(self, step_size):
+    def num_leapfrog(step_size):
         return jnp.clip(
-            jnp.ceil(self._trajectory_length / step_size).astype(jnp.int32),
+            jnp.ceil(trajectory_length / step_size).astype(jnp.int32),
             1, 1024)
 
-    def sample(self, state: HMCState) -> HMCState:
+    def sample_fn(state: HMCState) -> HMCState:
         rng_key, key_mom, key_tr, key_accept = jax.random.split(
             state.rng_key, 4)
         adapt = state.adapt_state
         imm, step_size = adapt.inverse_mass_matrix, adapt.step_size
         r = momentum_sample(key_mom, imm, state.z.dtype)
         energy_cur = state.potential_energy + kinetic_energy(imm, r)
-        _, vv_update = velocity_verlet(self.potential_fn)
+        _, vv_update = velocity_verlet(potential_fn)
 
-        if self._algo == "NUTS":
+        if algo == "NUTS":
             tree = build_tree(vv_update, imm, step_size, key_tr,
                               IntegratorState(state.z, r,
                                               state.potential_energy,
                                               state.z_grad),
-                              max_tree_depth=self._max_tree_depth)
+                              max_tree_depth=max_tree_depth)
             accept_prob = tree.sum_accept_probs / jnp.maximum(
                 tree.num_proposals, 1)
             z, pe, grad = tree.z_proposal, tree.z_proposal_pe, \
@@ -222,7 +204,7 @@ class HMC:
             num_steps = tree.num_proposals
             diverging = tree.diverging
         else:
-            n_steps = self._num_leapfrog(step_size)
+            n_steps = num_leapfrog(step_size)
 
             def body(i, s):
                 return vv_update(step_size, imm, s)
@@ -243,20 +225,182 @@ class HMC:
             num_steps = n_steps
             diverging = delta > 1000.0
 
-        in_warmup = state.i < self._num_warmup
+        in_warmup = state.i < num_warmup
         new_adapt = lax.cond(in_warmup,
-                             lambda _: self._adapt(state._replace(
-                                 adapt_state=adapt), accept_prob),
+                             lambda _: adapt_update(state, accept_prob),
                              lambda _: adapt, None)
         i = state.i + 1
         # running mean accept prob over the post-warmup phase
-        n_post = jnp.maximum(i - self._num_warmup, 1)
+        n_post = jnp.maximum(i - num_warmup, 1)
         mean_ap = jnp.where(
             in_warmup, accept_prob,
             state.mean_accept_prob + (accept_prob - state.mean_accept_prob)
             / n_post)
         return HMCState(i, z, pe, grad, energy, num_steps, accept_prob,
                         mean_ap, diverging, new_adapt, rng_key)
+
+    return sample_fn
+
+
+def _collect_fn(state: HMCState):
+    """Per-draw outputs the executor records during the sampling phase."""
+    return {
+        "z": state.z,
+        "potential_energy": state.potential_energy,
+        "num_steps": state.num_steps,
+        "accept_prob": state.accept_prob,
+        "diverging": state.diverging,
+        "step_size": state.adapt_state.step_size,
+    }
+
+
+def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
+              init_params=None, model_args=(), model_kwargs=None,
+              algo="HMC", step_size=1.0, trajectory_length=2 * jnp.pi,
+              adapt_step_size=True, adapt_mass_matrix=True, dense_mass=False,
+              target_accept_prob=0.8, max_tree_depth=10,
+              init_strategy="uniform") -> KernelSetup:
+    """Build the static :class:`KernelSetup` for HMC (``algo="HMC"``) or
+    NUTS (``algo="NUTS"``).
+
+    This is the only impure-ish step (it traces ``model`` once to discover
+    latent sites); everything it returns is a pure closure over the results.
+    ``rng_key`` only seeds the structure-discovery trace — per-chain
+    randomness comes from the key passed to ``init_fn``.
+    """
+    model_kwargs = model_kwargs or {}
+    transforms = None
+    if model is not None:
+        (potential_flat, unravel, transforms, constrain, tr,
+         flat_proto) = initialize_model_structure(rng_key, model, model_args,
+                                                  model_kwargs)
+        dim = flat_proto.shape[0]
+        z_fixed = None
+        if init_params is not None:
+            from jax.flatten_util import ravel_pytree
+            z_fixed = ravel_pytree({k: transforms[k].inv(v)
+                                    for k, v in init_params.items()})[0]
+    else:
+        if potential_fn is None:
+            raise ValueError("need a model or a potential_fn")
+        if init_params is None:
+            raise ValueError("potential_fn mode requires init_params")
+        from jax.flatten_util import ravel_pytree
+        z_fixed, unravel = ravel_pytree(init_params)
+        potential_flat, constrain = potential_fn, unravel
+        dim = z_fixed.shape[0]
+
+    schedule = build_adaptation_schedule(num_warmup)
+    init_fn = _make_init_fn(
+        potential_flat, dim, num_warmup, z_fixed=z_fixed,
+        adapt_step_size=adapt_step_size, dense_mass=dense_mass,
+        step_size0=step_size, init_strategy=init_strategy, model=model,
+        model_args=model_args, model_kwargs=model_kwargs,
+        transforms=transforms)
+    sample_fn = _make_sample_fn(
+        potential_flat, num_warmup, schedule, algo=algo,
+        trajectory_length=trajectory_length, adapt_step_size=adapt_step_size,
+        adapt_mass_matrix=adapt_mass_matrix, dense_mass=dense_mass,
+        target_accept_prob=target_accept_prob,
+        max_tree_depth=max_tree_depth)
+    return KernelSetup(
+        init_fn=init_fn, sample_fn=sample_fn, collect_fn=_collect_fn,
+        potential_fn=potential_flat, unravel_fn=unravel,
+        constrain_fn=constrain, num_warmup=int(num_warmup), algo=algo,
+        adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule))
+
+
+def nuts_setup(rng_key, num_warmup, **kwargs) -> KernelSetup:
+    """:func:`hmc_setup` with the iterative No-U-Turn transition."""
+    kwargs.pop("algo", None)
+    kwargs.pop("trajectory_length", None)
+    return hmc_setup(rng_key, num_warmup, algo="NUTS", **kwargs)
+
+
+def hmc_init(rng_key, num_warmup, **kwargs):
+    """Functional entry point: ``-> (HMCState, KernelSetup)``."""
+    setup = hmc_setup(rng_key, num_warmup, **kwargs)
+    return setup.init_fn(rng_key), setup
+
+
+def nuts_init(rng_key, num_warmup, **kwargs):
+    """Functional entry point: ``-> (HMCState, KernelSetup)``."""
+    setup = nuts_setup(rng_key, num_warmup, **kwargs)
+    return setup.init_fn(rng_key), setup
+
+
+# ---------------------------------------------------------------------------
+# class-based API: thin wrappers over the functional core
+# ---------------------------------------------------------------------------
+
+class HMC:
+    """Vanilla HMC with fixed/jittered trajectory length.
+
+    Thin wrapper: ``init`` builds a :class:`KernelSetup` (stored for the
+    legacy single-argument ``sample``) and returns the initial state;
+    ``setup`` exposes the pure functional core directly.
+    """
+
+    def __init__(self, model=None, potential_fn=None, step_size=1.0,
+                 trajectory_length=2 * jnp.pi, adapt_step_size=True,
+                 adapt_mass_matrix=True, dense_mass=False,
+                 target_accept_prob=0.8, init_strategy="uniform"):
+        self.model = model
+        self.potential_fn = potential_fn
+        self._step_size = step_size
+        self._trajectory_length = trajectory_length
+        self._adapt_step_size = adapt_step_size
+        self._adapt_mass_matrix = adapt_mass_matrix
+        self._dense_mass = dense_mass
+        self._target = target_accept_prob
+        self._init_strategy = init_strategy
+        self._algo = "HMC"
+        self._max_tree_depth = 10
+        self._setup: Optional[KernelSetup] = None
+
+    # -- functional core -----------------------------------------------------
+    def setup(self, rng_key, num_warmup, init_params=None, model_args=(),
+              model_kwargs=None) -> KernelSetup:
+        """Build the static setup for this kernel's configuration."""
+        return hmc_setup(
+            rng_key, num_warmup, model=self.model,
+            potential_fn=self.potential_fn if self.model is None else None,
+            init_params=init_params, model_args=model_args,
+            model_kwargs=model_kwargs, algo=self._algo,
+            step_size=self._step_size,
+            trajectory_length=self._trajectory_length,
+            adapt_step_size=self._adapt_step_size,
+            adapt_mass_matrix=self._adapt_mass_matrix,
+            dense_mass=self._dense_mass,
+            target_accept_prob=self._target,
+            max_tree_depth=self._max_tree_depth,
+            init_strategy=self._init_strategy)
+
+    # -- legacy API ----------------------------------------------------------
+    def init(self, rng_key, num_warmup, init_params=None, model_args=(),
+             model_kwargs=None):
+        setup = self.setup(rng_key, num_warmup, init_params=init_params,
+                           model_args=model_args, model_kwargs=model_kwargs)
+        self._bind_setup(setup)
+        return setup.init_fn(rng_key)
+
+    def sample(self, state: HMCState) -> HMCState:
+        if self._setup is None:
+            raise RuntimeError(
+                "call init() before the legacy one-argument sample(); for "
+                "the functional path use kernel_api.sample(setup, state) "
+                "with the setup returned by setup()")
+        return self._setup.sample_fn(state)
+
+    def _bind_setup(self, setup: KernelSetup):
+        self._setup = setup
+        # legacy attribute surface (read by older callers / tests)
+        if self.model is not None:
+            self.potential_fn = setup.potential_fn
+        self._unravel_fn = setup.unravel_fn
+        self._constrain_fn = setup.constrain_fn
+        self._num_warmup = setup.num_warmup
+        self._schedule = list(setup.adapt_schedule)
 
     # convenience: map flat unconstrained vector to constrained dict
     def constrain(self, z):

@@ -51,8 +51,16 @@ def momentum_sample(rng_key, inverse_mass_matrix, dtype=jnp.float32):
 
 
 def velocity_verlet(potential_fn: Callable, kinetic_grad=velocity):
-    """Single leapfrog (velocity Verlet) step closure."""
+    """Single leapfrog (velocity Verlet) step closure.
+
+    The diagonal-mass path routes the memory-bound half of the step —
+    momentum half-kick + position drift — through the fused
+    :func:`repro.kernels.ops.leapfrog_halfstep` (one HBM pass under Pallas;
+    a bit-identical jnp reference elsewhere).  Dense mass matrices and
+    custom ``kinetic_grad`` closures fall back to the two-pass form.
+    """
     pe_and_grad = jax.value_and_grad(potential_fn)
+    fuse_ok = kinetic_grad is velocity
 
     def init(z):
         pe, grad = pe_and_grad(z)
@@ -60,8 +68,13 @@ def velocity_verlet(potential_fn: Callable, kinetic_grad=velocity):
 
     def update(step_size, inverse_mass_matrix, state: IntegratorState):
         z, r, _, z_grad = state
-        r = r - 0.5 * step_size * z_grad
-        z = z + step_size * kinetic_grad(inverse_mass_matrix, r)
+        if fuse_ok and inverse_mass_matrix.ndim == 1:
+            from repro.kernels import ops
+            z, r = ops.leapfrog_halfstep(z, r, z_grad, inverse_mass_matrix,
+                                         step_size)
+        else:
+            r = r - 0.5 * step_size * z_grad
+            z = z + step_size * kinetic_grad(inverse_mass_matrix, r)
         pe, z_grad = pe_and_grad(z)
         r = r - 0.5 * step_size * z_grad
         return IntegratorState(z, r, pe, z_grad)

@@ -1,0 +1,86 @@
+"""The pure-functional sampler kernel contract.
+
+Everything downstream of the effect-handler stack is *pure* — that is the
+paper's composition claim — so samplers are exposed the way BlackJAX exposes
+them: an ``init`` that produces an immutable chain state and a ``sample``
+that maps state to state, with every static ingredient (potential closure,
+ravel/unravel, constrain, adaptation schedule) captured once in a
+:class:`KernelSetup`.  ``vmap``/``jit``/``shard_map`` then compose with the
+kernel for free: the executor in :mod:`repro.core.infer.mcmc` batches
+thousands of chains with a single ``vmap`` and checkpoints mid-run because
+the full chain state is an explicit pytree, never hidden in Python objects.
+
+Contract
+--------
+``init(rng_key, num_warmup, ...) -> (state, KernelSetup)``
+    Performs the one-time Python-level work (tracing the model, building
+    transforms) *and* the per-chain state initialization.  The returned
+    ``KernelSetup`` is static and hashable — it is a valid ``jax.jit``
+    static argument — while ``state`` is a pure array pytree.
+
+``sample(setup, state) -> state``
+    A pure function: no attribute reads or writes on any kernel object, so
+    one setup can drive any number of vmapped/sharded/scanned chains and
+    re-running it from the same state reproduces draws bit-for-bit.
+
+The class-based :class:`~repro.core.infer.hmc.HMC` / ``NUTS`` API survives
+as a thin wrapper over these functions (see ``docs/inference.md`` for the
+migration note).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Protocol, Tuple, runtime_checkable
+
+
+class KernelSetup(NamedTuple):
+    """Static, closure-carrying companion of a chain state.
+
+    All fields are hashable (functions hash by identity, tables are nested
+    tuples of ints), so a ``KernelSetup`` can be passed as a ``static_argnums``
+    argument to ``jax.jit`` — the jit cache then keys compiled executors on
+    the setup identity plus the abstract state shapes, which is exactly the
+    invalidation rule a multi-model driver needs.
+    """
+
+    init_fn: Callable          # rng_key -> state              (pure)
+    sample_fn: Callable        # state -> state                (pure)
+    collect_fn: Callable       # state -> dict of per-draw outputs (pure)
+    potential_fn: Callable     # flat (D,) -> scalar potential energy
+    unravel_fn: Callable       # flat (D,) -> latent pytree (unconstrained)
+    constrain_fn: Callable     # flat (D,) -> latent pytree (constrained)
+    num_warmup: int
+    algo: str                  # e.g. "HMC" | "NUTS"
+    adapt_schedule: Tuple[Tuple[int, int], ...]  # Stan-style (start, end)
+
+
+def init_state(setup: KernelSetup, rng_key):
+    """Pure per-chain state init; ``vmap`` over keys for a batch of chains."""
+    return setup.init_fn(rng_key)
+
+
+def sample(setup: KernelSetup, state):
+    """One pure transition ``state -> state`` under ``setup``."""
+    return setup.sample_fn(state)
+
+
+def collect(setup: KernelSetup, state):
+    """Per-draw outputs (position + diagnostics) recorded by the executor."""
+    return setup.collect_fn(state)
+
+
+@runtime_checkable
+class SamplerKernel(Protocol):
+    """Anything the multi-chain executor can drive.
+
+    ``setup`` does the one-time Python-level work and returns the static
+    ``KernelSetup`` whose ``init_fn``/``sample_fn`` are the pure pair above;
+    ``init`` bundles both steps for single-chain use.
+    """
+
+    def setup(self, rng_key, num_warmup, init_params=None, model_args=(),
+              model_kwargs=None) -> KernelSetup:
+        ...
+
+    def init(self, rng_key, num_warmup, init_params=None, model_args=(),
+             model_kwargs=None) -> Any:
+        ...

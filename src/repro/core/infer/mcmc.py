@@ -1,26 +1,71 @@
-"""MCMC driver: whole chains (warmup + sampling) compile into one XLA program;
-multiple chains are vectorized with ``vmap`` or sharded across devices.
+"""MCMC driver: one chunked multi-chain executor for every chain method.
 
-Fault tolerance: ``MCMC.run(..., checkpoint_every=k, checkpoint_dir=...)``
-persists chain state so a preempted run resumes exactly where it stopped.
+Chains are always a batch: ``init_fn``/``sample_fn`` from the kernel's
+:class:`~repro.core.infer.kernel_api.KernelSetup` are pure, so the executor
+``vmap``s them over a leading ``(chains,)`` axis and runs the whole batch in
+``ceil(T / checkpoint_every)`` compiled ``lax.scan`` chunks:
+
+- ``vectorized`` — the batched program on one device (paper Sec 3.2);
+- ``parallel``  — the *same* program with the chain axis sharded over a
+  1-D ``chains`` mesh: thousands of chains spread over a pod with zero
+  change to kernel code;
+- ``sequential`` — the same compiled batch-size-1 program invoked per
+  chain (bounded memory), results stacked host-side.
+
+Fault tolerance: ``run(..., checkpoint_every=k, checkpoint_dir=d)`` persists
+the full chain state (``d/state``, overwritten) plus each completed chunk of
+collected draws (``d/samples_<start>_<end>``, written once — total I/O stays
+linear in chain length) through ``repro.distributed.checkpoint.save``, and
+``run(..., resume=True)`` restores from ``latest_step`` and continues to
+bit-identical final samples — chunk boundaries are a pure function of the
+iteration count, so a resumed run replays the exact op sequence of an
+uninterrupted one.
 """
 from __future__ import annotations
 
+import json
 import os
-from functools import partial
-from typing import Callable, Optional
+import re
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
+from jax import lax, random
 
 from .diagnostics import print_summary
-from .hmc import HMC, HMCState
+from .hmc import HMC, HMCState  # noqa: F401  (re-exported legacy surface)
+from .kernel_api import KernelSetup
+
+_SAMPLES_DIR_RE = re.compile(r"^samples_(\d+)_(\d+)$")
+
+
+def _tree_concat(parts, axis=1):
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=axis), *parts)
+
+
+def _same_args(old, new):
+    """True iff two (args, kwargs, init_params) bundles are structurally
+    identical with every array leaf being the *same object* — the executor's
+    closures capture argument values, so value identity (not just shape) is
+    the safe cache condition."""
+    old_leaves, old_def = jax.tree_util.tree_flatten(old)
+    new_leaves, new_def = jax.tree_util.tree_flatten(new)
+    if old_def != new_def or len(old_leaves) != len(new_leaves):
+        return False
+    for a, b in zip(old_leaves, new_leaves):
+        if hasattr(a, "shape") or hasattr(b, "shape"):
+            if a is not b:
+                return False
+        elif a != b:
+            return False
+    return True
 
 
 class MCMC:
-    def __init__(self, kernel: HMC, num_warmup: int, num_samples: int,
+    def __init__(self, kernel, num_warmup: int, num_samples: int,
                  num_chains: int = 1, thinning: int = 1,
                  chain_method: str = "vectorized", progress: bool = False,
                  collect_fields=("z",), jit_model_args: bool = False):
@@ -34,119 +79,258 @@ class MCMC:
         self.chain_method = chain_method
         self.collect_fields = collect_fields
         self._samples = None
-        self._extra = None
+        self._collected = None
         self._last_state = None
-        self._run_cache = {}   # (warmup, samples, done) -> compiled run
+        self._setup_cache = None   # (args-bundle, num_warmup, KernelSetup)
+        # compiled executors, keyed on (kind, setup, length).  Instance-level
+        # (not a module-level jit) so dropping the MCMC object frees the
+        # executables AND the datasets captured by the setup closures; keying
+        # on the setup means reuse across models/arg-shapes can never replay
+        # a stale executable — a different model or shape is a new setup.
+        self._exec_cache = {}
 
-    # -- single chain -------------------------------------------------------
-    def _run_chain(self, rng_key, init_params, model_args, model_kwargs,
-                   initial_state=None, num_done=0):
-        kernel = self.kernel
-        if initial_state is None:
-            state = kernel.init(rng_key, self.num_warmup,
-                                init_params=init_params,
-                                model_args=model_args,
-                                model_kwargs=model_kwargs)
+    # -- compiled chunk programs ----------------------------------------------
+    def _exec(self, kind, setup: KernelSetup, length=None):
+        key = (kind, setup, length)
+        fn = self._exec_cache.get(key)
+        if fn is not None:
+            return fn
+        if kind == "init":
+            fn = jax.jit(lambda keys: jax.vmap(setup.init_fn)(keys))
+        elif kind == "warmup":
+            def one_warm(state):
+                return lax.scan(lambda s, _: (setup.sample_fn(s), None),
+                                state, None, length=length)[0]
+
+            fn = jax.jit(lambda states: jax.vmap(one_warm)(states))
+        elif kind == "sample":
+            def body(s, _):
+                s = setup.sample_fn(s)
+                return s, setup.collect_fn(s)
+
+            def one_sample(state):
+                return lax.scan(body, state, None, length=length)
+
+            fn = jax.jit(lambda states: jax.vmap(one_sample)(states))
         else:
-            state = initial_state
+            raise ValueError(kind)
+        self._exec_cache[key] = fn
+        return fn
 
-        def warmup_body(state, _):
-            return kernel.sample(state), None
+    # -- setup ---------------------------------------------------------------
+    def _get_setup(self, rng_key, init_params, model_args,
+                   model_kwargs) -> KernelSetup:
+        bundle = (model_args, model_kwargs, init_params)
+        if self._setup_cache is not None:
+            old_bundle, old_warmup, old_setup = self._setup_cache
+            if old_warmup == self.num_warmup and _same_args(old_bundle,
+                                                            bundle):
+                return old_setup
+            # evict the replaced setup's executors: they pin compiled
+            # programs plus the dataset captured by its closures
+            self._exec_cache = {k: v for k, v in self._exec_cache.items()
+                                if k[1] is not old_setup}
+        setup = self.kernel.setup(rng_key, self.num_warmup,
+                                  init_params=init_params,
+                                  model_args=model_args,
+                                  model_kwargs=model_kwargs)
+        self._setup_cache = (bundle, self.num_warmup, setup)
+        return setup
 
-        def sample_body(state, _):
-            state = kernel.sample(state)
-            out = {
-                "z": state.z,
-                "potential_energy": state.potential_energy,
-                "num_steps": state.num_steps,
-                "accept_prob": state.accept_prob,
-                "diverging": state.diverging,
-                "step_size": state.adapt_state.step_size,
-            }
-            return state, out
+    def _chains_sharding(self):
+        n_dev = len(jax.devices())
+        use = max(d for d in range(1, n_dev + 1)
+                  if self.num_chains % d == 0)
+        from repro._compat import make_mesh_axis_kwargs
+        mesh = jax.make_mesh((use,), ("chains",),
+                             devices=jax.devices()[:use],
+                             **make_mesh_axis_kwargs(1))
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(mesh, PartitionSpec("chains"))
 
-        cache_key = (self.num_warmup, self.num_samples, int(num_done))
-        if cache_key not in self._run_cache:
-            @jax.jit
-            def run(state):
-                n_warm = max(self.num_warmup - int(num_done), 0)
-                if n_warm > 0:
-                    state, _ = lax.scan(warmup_body, state, None,
-                                        length=n_warm)
-                state, collected = lax.scan(sample_body, state, None,
-                                            length=self.num_samples)
-                return state, collected
-            self._run_cache[cache_key] = run
+    # -- checkpoint/resume ----------------------------------------------------
+    # Layout under checkpoint_dir:
+    #   state/                     latest chain state, overwritten per chunk
+    #   samples_<start>_<end>/     one immutable dir per completed sampling
+    #                              chunk (iteration range, end-exclusive) —
+    #                              append-only, so checkpoint I/O is linear
+    #                              in chain length, not quadratic.
+    # The state manifest's step advances only after the chunk's samples are
+    # on disk; an orphaned samples dir from a crash between the two writes is
+    # deterministically rewritten (same rng path) after resume.
 
-        return self._run_cache[cache_key](state)
+    def _save_checkpoint(self, directory, states, done, chunk=None,
+                         chunk_range=None):
+        import shutil
+
+        from repro.distributed import checkpoint as ckpt
+        os.makedirs(directory, exist_ok=True)
+        if chunk is not None:
+            start, end = chunk_range
+            # drop orphaned chunks at/after this start (abandoned futures
+            # from a crash or a resume with a different checkpoint_every) —
+            # keeps on-disk chunks non-overlapping and contiguous, so a
+            # finished checkpoint is always restorable
+            for name in os.listdir(directory):
+                m = _SAMPLES_DIR_RE.match(name)
+                if m and int(m.group(1)) >= start:
+                    shutil.rmtree(os.path.join(directory, name))
+            ckpt.save(chunk,
+                      os.path.join(directory, f"samples_{start:06d}_{end:06d}"),
+                      step=end)
+        ckpt.save({"chain_state": states}, os.path.join(directory, "state"),
+                  step=done,
+                  extra={"num_warmup": self.num_warmup,
+                         "num_samples": self.num_samples,
+                         "num_chains": self.num_chains})
+
+    def _restore_checkpoint(self, directory, setup, keys):
+        """Returns (states, collected_or_None, done) or None if no
+        checkpoint exists yet."""
+        from repro.distributed import checkpoint as ckpt
+        state_dir = os.path.join(directory, "state")
+        done = ckpt.latest_step(state_dir)
+        if done is None:
+            return None
+        with open(os.path.join(state_dir, "manifest.json")) as f:
+            extra = json.load(f)["extra"]
+        for field in ("num_warmup", "num_samples", "num_chains"):
+            if extra.get(field) != getattr(self, field):
+                raise ValueError(
+                    f"checkpoint at {directory} was written by a run with "
+                    f"{field}={extra.get(field)}, this MCMC has "
+                    f"{getattr(self, field)}")
+
+        state_skel = jax.eval_shape(
+            lambda k: jax.vmap(setup.init_fn)(k), keys)
+        tree, _, _ = ckpt.restore({"chain_state": state_skel}, state_dir)
+        states = tree["chain_state"]
+
+        # collected draws: restore every completed chunk up to `done`
+        ranges = []
+        for name in os.listdir(directory):
+            m = _SAMPLES_DIR_RE.match(name)
+            if m and int(m.group(2)) <= done:
+                ranges.append((int(m.group(1)), int(m.group(2))))
+        ranges.sort()
+        expected_start = self.num_warmup
+        parts, skel_cache = [], {}
+        for start, end in ranges:
+            if start != expected_start:
+                raise ValueError(
+                    f"checkpoint at {directory} is missing the sample chunk "
+                    f"starting at iteration {expected_start}")
+            length = end - start
+            skel = skel_cache.get(length)
+            if skel is None:
+                # abstract-trace the chunk once per distinct length (at most
+                # two: full chunk + remainder), not once per chunk dir
+                def chunk_skel(states_skel, length=length):
+                    def body(s, _):
+                        s = setup.sample_fn(s)
+                        return s, setup.collect_fn(s)
+
+                    return jax.vmap(lambda s: lax.scan(
+                        body, s, None, length=length)[1])(states_skel)
+
+                skel = jax.eval_shape(chunk_skel, state_skel)
+                skel_cache[length] = skel
+            part, _, _ = ckpt.restore(
+                skel, os.path.join(directory, f"samples_{start:06d}_{end:06d}"))
+            parts.append(part)
+            expected_start = end
+        if expected_start != max(done, self.num_warmup):
+            raise ValueError(
+                f"checkpoint at {directory} is missing sample chunks "
+                f"covering iterations {expected_start}..{done}")
+        collected = _tree_concat(parts) if parts else None
+        return states, collected, done
+
+    # -- the executor ---------------------------------------------------------
+    def _advance(self, setup, states, collected, done, *, checkpoint_every,
+                 checkpoint_dir):
+        """Advance a batch of chains from iteration ``done`` to the end in
+        compiled chunks, checkpointing after each chunk.  Chunk boundaries
+        depend only on (num_warmup, num_samples, checkpoint_every, done),
+        so a resumed run replays the identical op sequence."""
+        total = self.num_warmup + self.num_samples
+        chunk = int(checkpoint_every) if checkpoint_every else total
+        while done < total:
+            out = None
+            if done < self.num_warmup:
+                n = min(chunk, self.num_warmup - done)
+                states = self._exec("warmup", setup, n)(states)
+            else:
+                n = min(chunk, total - done)
+                states, out = self._exec("sample", setup, n)(states)
+                collected = out if collected is None else _tree_concat(
+                    [collected, out])
+            done += n
+            if checkpoint_dir is not None:
+                self._save_checkpoint(
+                    checkpoint_dir, states, done, chunk=out,
+                    chunk_range=(done - n, done) if out is not None else None)
+        return states, collected
 
     # -- public API ----------------------------------------------------------
     def run(self, rng_key, *model_args, init_params=None,
             checkpoint_every: Optional[int] = None,
-            checkpoint_dir: Optional[str] = None, **model_kwargs):
-        if self.num_chains == 1:
-            state, collected = self._run_chain(
-                rng_key, init_params, model_args, model_kwargs)
-            collected = jax.tree_util.tree_map(lambda x: x[None], collected)
-            states = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None],
-                                            state)
+            checkpoint_dir: Optional[str] = None, resume: bool = False,
+            **model_kwargs):
+        if resume and checkpoint_dir is None:
+            raise ValueError("resume=True requires checkpoint_dir")
+        setup = self._get_setup(rng_key, init_params, model_args,
+                                model_kwargs)
+        keys = random.split(rng_key, self.num_chains)
+
+        if self.chain_method == "sequential":
+            if checkpoint_every or checkpoint_dir:
+                raise ValueError(
+                    "checkpointing requires a batched chain_method "
+                    "('vectorized' or 'parallel')")
+            per_chain = []
+            for k in keys:
+                st = self._exec("init", setup)(k[None])
+                st, out = self._advance(setup, st, None, 0,
+                                        checkpoint_every=None,
+                                        checkpoint_dir=None)
+                per_chain.append((st, out))
+            states = _tree_concat([s for s, _ in per_chain], axis=0)
+            collected = _tree_concat([o for _, o in per_chain], axis=0)
         else:
-            keys = jax.random.split(rng_key, self.num_chains)
-            if self.chain_method == "sequential":
-                outs = [self._run_chain(k, init_params, model_args,
-                                        model_kwargs) for k in keys]
-                states = jax.tree_util.tree_map(
-                    lambda *x: jnp.stack(x), *[o[0] for o in outs])
-                collected = jax.tree_util.tree_map(
-                    lambda *x: jnp.stack(x), *[o[1] for o in outs])
-            else:
-                # vectorized: chains batched by vmap into ONE XLA program.
-                # parallel: same program, with the chain axis sharded over
-                # the devices of a 1-D mesh — thousands of chains spread
-                # over a pod with zero change to kernel code (the paper's
-                # Sec 3.2 claim at cluster scale).
+            if self.chain_method == "parallel":
+                keys = jax.device_put(keys, self._chains_sharding())
+
+            restored = None
+            if resume:
+                restored = self._restore_checkpoint(checkpoint_dir, setup,
+                                                    keys)
+            if restored is not None:
+                states, collected, done = restored
                 if self.chain_method == "parallel":
-                    n_dev = len(jax.devices())
-                    use = max(d for d in range(1, n_dev + 1)
-                              if self.num_chains % d == 0)
-                    from repro._compat import make_mesh_axis_kwargs
-                    mesh = jax.make_mesh(
-                        (use,), ("chains",),
-                        devices=jax.devices()[:use],
-                        **make_mesh_axis_kwargs(1))
-                    from jax.sharding import NamedSharding, PartitionSpec
-                    keys = jax.device_put(
-                        keys, NamedSharding(mesh, PartitionSpec("chains")))
+                    sharding = self._chains_sharding()
+                    states = jax.tree_util.tree_map(
+                        lambda x: jax.device_put(x, sharding), states)
+                    if collected is not None:
+                        collected = jax.tree_util.tree_map(
+                            lambda x: jax.device_put(x, sharding), collected)
+            else:
+                states, collected, done = (
+                    self._exec("init", setup)(keys), None, 0)
 
-                def chain(key):
-                    st = self.kernel.init(key, self.num_warmup,
-                                          init_params=init_params,
-                                          model_args=model_args,
-                                          model_kwargs=model_kwargs)
-                    return self._run_chain(key, init_params, model_args,
-                                           model_kwargs, initial_state=st)
-
-                states, collected = jax.vmap(chain)(keys)
+            states, collected = self._advance(
+                setup, states, collected, done,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir)
 
         self._last_state = states
         self._collected = collected
         # constrained-space samples keyed by site name
-        constrain = getattr(self.kernel, "_constrain_fn", None)
         z = collected["z"]  # (chains, samples, D)
-        if constrain is not None:
-            self._samples = jax.vmap(jax.vmap(constrain))(z)
-        else:
-            self._samples = {"z": z}
-        if checkpoint_dir is not None:
-            self._save_checkpoint(checkpoint_dir)
+        self._samples = jax.vmap(jax.vmap(setup.constrain_fn))(z)
+        if not isinstance(self._samples, dict):
+            self._samples = {"z": self._samples}
         return self
-
-    # -- checkpoint/restart ---------------------------------------------------
-    def _save_checkpoint(self, path):
-        os.makedirs(path, exist_ok=True)
-        flat, treedef = jax.tree_util.tree_flatten(self._last_state)
-        np.savez(os.path.join(path, "mcmc_state.npz"),
-                 *[np.asarray(x) for x in flat])
 
     def get_samples(self, group_by_chain: bool = False):
         samples = self._samples
@@ -160,6 +344,10 @@ class MCMC:
 
     def get_extra_fields(self, group_by_chain: bool = False):
         extra = {k: v for k, v in self._collected.items() if k != "z"}
+        # keep extras aligned with get_samples: same thinning slice
+        if self.thinning > 1:
+            extra = jax.tree_util.tree_map(
+                lambda x: x[:, ::self.thinning], extra)
         if group_by_chain:
             return extra
         return jax.tree_util.tree_map(

@@ -83,17 +83,19 @@ def potential_energy(model, model_args, model_kwargs, transforms, params_uncon):
     return -(log_joint + log_det)
 
 
-def initialize_model(rng_key, model, model_args=(), model_kwargs=None,
-                     init_strategy="uniform", radius=2.0, max_tries=100):
-    """Find valid initial unconstrained parameters with finite potential.
+def initialize_model_structure(rng_key, model, model_args=(),
+                               model_kwargs=None):
+    """One-time Python-level work: trace the model, build the flat-space
+    closures.  No initial-point search — that part is pure and per-chain
+    (:func:`find_valid_initial_params`), so a multi-chain driver runs this
+    once and ``vmap``s the search over chain keys.
 
-    Returns ``(init_params_flat, potential_fn_flat, unravel_fn, transforms,
-    constrain, model_trace)``; everything downstream (integrator, NUTS tree)
-    works on a single flat vector so mass-matrix algebra and the U-turn
-    checkpointing arrays are simple ``(D,)``/``(depth, D)`` buffers.
+    Returns ``(potential_fn_flat, unravel_fn, transforms, constrain,
+    model_trace, flat_prototype)``.
     """
     model_kwargs = model_kwargs or {}
-    transforms, tr = get_model_transforms(model, model_args, model_kwargs, rng_key)
+    transforms, tr = get_model_transforms(model, model_args, model_kwargs,
+                                          rng_key)
     if not transforms:
         raise ValueError("model has no latent sample sites")
 
@@ -111,17 +113,33 @@ def initialize_model(rng_key, model, model_args=(), model_kwargs=None,
     def constrain(zflat):
         return transform_fn(transforms, unravel_fn(zflat))
 
+    return potential_flat, unravel_fn, transforms, constrain, tr, flat_proto
+
+
+def find_valid_initial_params(rng_key, potential_fn, prototype, *,
+                              init_strategy="uniform", radius=2.0,
+                              max_tries=100, model=None, model_args=(),
+                              model_kwargs=None, transforms=None):
+    """Pure rejection search for a flat unconstrained init with finite
+    potential and gradient.  Jit/vmap-safe: a batch of chains searches
+    independently under one ``vmap``.
+
+    Returns ``(z, potential, grad)``.
+    """
+    model_kwargs = model_kwargs or {}
+
     def _try(key):
         if init_strategy == "uniform":
-            z = jax.random.uniform(key, flat_proto.shape, minval=-radius,
+            z = jax.random.uniform(key, jnp.shape(prototype), minval=-radius,
                                    maxval=radius)
         elif init_strategy == "prior":
-            sub_tr = trace(seed(model, key)).get_trace(*model_args, **model_kwargs)
+            sub_tr = trace(seed(model, key)).get_trace(*model_args,
+                                                       **model_kwargs)
             z = ravel_pytree({n: transforms[n].inv(sub_tr[n]["value"])
                               for n in transforms})[0]
         else:
             raise ValueError(f"unknown init strategy {init_strategy}")
-        pe, grad = jax.value_and_grad(potential_flat)(z)
+        pe, grad = jax.value_and_grad(potential_fn)(z)
         ok = jnp.isfinite(pe) & jnp.all(jnp.isfinite(grad))
         return z, pe, grad, ok
 
@@ -138,7 +156,31 @@ def initialize_model(rng_key, model, model_args=(), model_kwargs=None,
     key0, sub0 = jax.random.split(rng_key)
     z0, pe0, grad0, ok0 = _try(sub0)
     _, z, pe, grad, ok, _ = jax.lax.while_loop(
-        cond_fn, body_fn, (jnp.zeros((), jnp.int32), z0, pe0, grad0, ok0, key0))
+        cond_fn, body_fn,
+        (jnp.zeros((), jnp.int32), z0, pe0, grad0, ok0, key0))
+    return z, pe, grad
+
+
+def initialize_model(rng_key, model, model_args=(), model_kwargs=None,
+                     init_strategy="uniform", radius=2.0, max_tries=100):
+    """Find valid initial unconstrained parameters with finite potential.
+
+    Returns ``(init_params_flat, potential_fn_flat, unravel_fn, transforms,
+    constrain, model_trace)``; everything downstream (integrator, NUTS tree)
+    works on a single flat vector so mass-matrix algebra and the U-turn
+    checkpointing arrays are simple ``(D,)``/``(depth, D)`` buffers.
+
+    Compatibility wrapper over :func:`initialize_model_structure` (trace
+    once) + :func:`find_valid_initial_params` (pure per-chain search).
+    """
+    (potential_flat, unravel_fn, transforms, constrain, tr,
+     flat_proto) = initialize_model_structure(rng_key, model, model_args,
+                                              model_kwargs)
+    z, _, _ = find_valid_initial_params(
+        rng_key, potential_flat, flat_proto, init_strategy=init_strategy,
+        radius=radius, max_tries=max_tries, model=model,
+        model_args=model_args, model_kwargs=model_kwargs,
+        transforms=transforms)
     return z, potential_flat, unravel_fn, transforms, constrain, tr
 
 

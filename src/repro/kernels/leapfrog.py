@@ -1,11 +1,18 @@
-"""Fused leapfrog update for HMC/NUTS (the paper's compute hot-spot).
+"""Fused leapfrog half-step for HMC/NUTS (the paper's compute hot-spot).
 
 One HBM pass computes the momentum half-step and the position full-step
-together:  r' = r + (eps/2) * g ;  z' = z + eps * (r' / m)  — the purely
+together:  r' = r - (eps/2) * g ;  z' = z + eps * (r' * m_inv)  — the purely
 memory-bound half of the integrator (the other half is the potential-energy
 gradient, which is the model's own compute).  For the million-dimensional
 latent spaces of SKIM-scale models this halves integrator memory traffic
 vs. two separate axpy passes.
+
+The sign convention matches ``hmc_util.velocity_verlet`` exactly (``g`` is
+the gradient of the *potential*), so the kernel drops into the integrator
+with no extra negation pass.  ``eps`` is a traced operand — NUTS flips its
+sign when growing the trajectory leftwards and adaptation rescales it every
+warmup step — so it is shipped as a tiny (1,) array rather than baked into
+the kernel at trace time.
 """
 from __future__ import annotations
 
@@ -18,12 +25,14 @@ from jax.experimental import pallas as pl
 BLOCK = 4096
 
 
-def _kernel(z_ref, r_ref, g_ref, minv_ref, znew_ref, rnew_ref, *, eps):
-    r = r_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    z = z_ref[...].astype(jnp.float32)
-    r_new = r + 0.5 * eps * g
-    z_new = z + eps * (r_new * minv_ref[...].astype(jnp.float32))
+def _kernel(eps_ref, z_ref, r_ref, g_ref, minv_ref, znew_ref, rnew_ref, *,
+            compute_dtype):
+    eps = eps_ref[0].astype(compute_dtype)
+    r = r_ref[...].astype(compute_dtype)
+    g = g_ref[...].astype(compute_dtype)
+    z = z_ref[...].astype(compute_dtype)
+    r_new = r - 0.5 * eps * g
+    z_new = z + eps * (r_new * minv_ref[...].astype(compute_dtype))
     rnew_ref[...] = r_new.astype(rnew_ref.dtype)
     znew_ref[...] = z_new.astype(znew_ref.dtype)
 
@@ -37,19 +46,22 @@ def leapfrog_halfstep(z, r, grad, m_inv, eps, *, interpret=False):
         z, r, grad, m_inv = (jnp.pad(a, (0, pad)) for a in (z, r, grad,
                                                             m_inv))
     n = z.shape[0]
-    eps = float(eps) if not hasattr(eps, "dtype") else eps
+    # accumulate low-precision inputs in f32, but never truncate f64 chains
+    compute_dtype = jnp.promote_types(z.dtype, jnp.float32)
+    eps = jnp.asarray(eps, compute_dtype).reshape(1)
     zf, rf = pl.pallas_call(
-        functools.partial(_kernel, eps=eps),
+        functools.partial(_kernel, compute_dtype=compute_dtype),
         grid=(n // blk,),
-        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 4,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))]
+        + [pl.BlockSpec((blk,), lambda i: (i,))] * 4,
         out_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 2,
         out_shape=[jax.ShapeDtypeStruct((n,), z.dtype),
                    jax.ShapeDtypeStruct((n,), r.dtype)],
         interpret=interpret,
-    )(z, r, grad, m_inv)
+    )(eps, z, r, grad, m_inv)
     return zf[:D], rf[:D]
 
 
 def leapfrog_halfstep_ref(z, r, grad, m_inv, eps):
-    r_new = r + 0.5 * eps * grad
+    r_new = r - 0.5 * eps * grad
     return z + eps * (r_new * m_inv), r_new

@@ -51,6 +51,16 @@ def mla_absorbed_decode(q_nope, q_rope, c_kv, k_rope, wk, wv, mask, *, scale):
                                    mask, scale=scale)
 
 
+def leapfrog_halfstep(z, r, grad, m_inv, eps):
+    """Fused momentum half-step + position full-step of velocity Verlet
+    (diagonal mass).  One HBM pass under Pallas; jnp reference otherwise."""
+    if _STATE["pallas"]:
+        from .leapfrog import leapfrog_halfstep as _k
+        return _k(z, r, grad, m_inv, eps, interpret=_STATE["interpret"])
+    from .leapfrog import leapfrog_halfstep_ref
+    return leapfrog_halfstep_ref(z, r, grad, m_inv, eps)
+
+
 def rmsnorm(x, weight, eps=1e-6):
     if _STATE["pallas"]:
         from .rmsnorm import rmsnorm as _k

@@ -171,6 +171,70 @@ def test_leapfrog_fused():
     assert float(jnp.max(jnp.abs(r1 - r2))) < 1e-6
 
 
+def test_leapfrog_fused_inside_velocity_verlet():
+    """Parity of the Pallas halfstep (interpret mode) vs the jnp reference
+    *as wired inside* velocity_verlet — the integrator the NUTS tree runs,
+    not the kernel in isolation."""
+    from repro.core.infer.hmc_util import IntegratorState, velocity_verlet
+    from repro.kernels import ops
+
+    D = 513  # non-multiple of block: exercises padding inside the verlet
+    A = random.normal(random.PRNGKey(0), (D, D)) * 0.1
+    prec = A @ A.T / D + jnp.eye(D)
+    pot = lambda z: 0.5 * jnp.dot(z, prec @ z)  # noqa: E731
+    _, vv_update = velocity_verlet(pot)
+
+    ks = random.split(random.PRNGKey(1), 3)
+    z, r = random.normal(ks[0], (D,)), random.normal(ks[1], (D,))
+    m_inv = jnp.abs(random.normal(ks[2], (D,))) + 0.5
+    pe, grad = jax.value_and_grad(pot)(z)
+    state = IntegratorState(z, r, pe, grad)
+
+    import numpy as np
+    for eps in (0.05, -0.05):   # negative: NUTS growing the tree leftwards
+        ref_out = vv_update(jnp.asarray(eps), m_inv, state)
+        with ops.use_pallas(True, interpret=True):
+            pl_out = vv_update(jnp.asarray(eps), m_inv, state)
+        for a, b in zip(pl_out, ref_out):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-5)
+
+
+def test_leapfrog_fused_jit_vmap_compile_once():
+    """jit(vmap(verlet-with-fused-kernel)) over a batch of chains traces
+    once and matches the reference batch."""
+    from repro.core.infer.hmc_util import IntegratorState, velocity_verlet
+    from repro.kernels import ops
+
+    B, D = 8, 256
+    pot = lambda z: 0.5 * jnp.dot(z, z)  # noqa: E731
+    _, vv_update = velocity_verlet(pot)
+    ks = random.split(random.PRNGKey(2), 2)
+    zb, rb = random.normal(ks[0], (B, D)), random.normal(ks[1], (B, D))
+    m_inv = jnp.ones(D)
+    peb, gradb = jax.vmap(jax.value_and_grad(pot))(zb)
+
+    n_traces = 0
+
+    def step(z, r, pe, g):
+        nonlocal n_traces
+        n_traces += 1
+        return vv_update(jnp.asarray(0.1), m_inv,
+                         IntegratorState(z, r, pe, g))
+
+    with ops.use_pallas(True, interpret=True):
+        batched = jax.jit(jax.vmap(step))
+        out1 = batched(zb, rb, peb, gradb)
+        out2 = batched(zb + 0, rb + 0, peb + 0, gradb + 0)
+    assert n_traces == 1
+    exp = jax.vmap(lambda z, r, pe, g: vv_update(
+        jnp.asarray(0.1), m_inv, IntegratorState(z, r, pe, g)))(
+        zb, rb, peb, gradb)
+    for a, b in zip(out1, exp):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+    assert float(jnp.max(jnp.abs(out1.z - out2.z))) == 0.0
+
+
 def test_mla_absorbed_decode_matches_expanded():
     """The absorbed-matmul MLA decode == naive expand-then-attend."""
     B, S, H, dn, dr, r, dv = 2, 16, 4, 16, 8, 32, 16
