@@ -29,8 +29,9 @@ def _previous_headlines():
                        for m in ("ms_per_leapfrog", "ms_per_eff_sample",
                                  "wall_s")
                        if m in prev[k]}
-    if isinstance(prev.get("multichain"), dict):
-        keep["multichain"] = {"rows": prev["multichain"].get("rows")}
+    for k in ("multichain", "svi_minibatch"):
+        if isinstance(prev.get(k), dict):
+            keep[k] = {"rows": prev[k].get("rows")}
     return keep or None
 
 
@@ -41,7 +42,7 @@ def main():
     out = {}
     previous = _previous_headlines()
 
-    from benchmarks import hmm, logreg, multichain, skim
+    from benchmarks import hmm, logreg, multichain, skim, svi_minibatch
     print("=" * 70)
     print("Table 2a — HMM (time per leapfrog step)")
     print("=" * 70, flush=True)
@@ -56,6 +57,11 @@ def main():
     print("Multi-chain throughput (chains × samples/sec, vmap executor)")
     print("=" * 70, flush=True)
     out["multichain"] = multichain.main(quick=quick)
+
+    print("=" * 70)
+    print("Minibatch SVI (steps/sec vs subsample size, one compiled step)")
+    print("=" * 70, flush=True)
+    out["svi_minibatch"] = svi_minibatch.main(quick=quick)
 
     print("=" * 70)
     print("Fig 2b — SKIM time per effective sample vs p")

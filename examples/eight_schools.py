@@ -1,0 +1,92 @@
+"""Eight schools: centered vs non-centered parameterization via `reparam`.
+
+The classic hierarchical meta-analysis (Rubin 1981; Gelman et al. BDA) is the
+textbook funnel: with only 8 groups the posterior over the group-level scale
+``tau`` concentrates near zero, and in the *centered* parameterization
+``theta_j ~ Normal(mu, tau)`` NUTS must shrink its step size to enter the
+funnel neck, so chains mix poorly.  Wrapping the unchanged model in
+
+    reparam(eight_schools, config={"theta": LocScaleReparam(0.0)})
+
+rewrites the site on the fly into ``theta_decentered ~ Normal(0, 1)`` plus the
+deterministic ``theta = mu + tau * theta_decentered`` — same joint density,
+benign geometry — demonstrating the paper's claim that inference-motivated
+model surgery is a *handler*, not a model rewrite.  Both variants run through
+the identical jit-compiled NUTS executor (one compiled program per variant:
+warmup + sampling is a single chunked ``lax.scan`` over vmapped chains).
+
+    PYTHONPATH=src python examples/eight_schools.py
+"""
+import jax.numpy as jnp
+from jax import random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.handlers import reparam
+from repro.core.infer import (MCMC, NUTS, Predictive, effective_sample_size,
+                              gelman_rubin)
+from repro.core.reparam import LocScaleReparam
+
+J = 8
+y = jnp.array([28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0])
+sigma = jnp.array([15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0])
+
+NUM_WARMUP, NUM_SAMPLES, NUM_CHAINS = 150, 200, 4
+
+
+def eight_schools(y=None):
+    mu = pc.sample("mu", dist.Normal(0.0, 5.0))
+    tau = pc.sample("tau", dist.HalfCauchy(5.0))
+    with pc.plate("J", J):
+        theta = pc.sample("theta", dist.Normal(mu, tau))
+        pc.sample("obs", dist.Normal(theta, sigma), obs=y)
+    return theta
+
+
+def run(model):
+    mcmc = MCMC(NUTS(model), num_warmup=NUM_WARMUP, num_samples=NUM_SAMPLES,
+                num_chains=NUM_CHAINS)
+    mcmc.run(random.PRNGKey(0), y=y)
+    samples = mcmc.get_samples(group_by_chain=True)
+    diagnostics = {
+        name: (float(jnp.max(jnp.asarray(gelman_rubin(v)))),
+               float(jnp.min(jnp.asarray(effective_sample_size(v)))))
+        for name, v in samples.items()
+    }
+    return mcmc, diagnostics
+
+
+def main():
+    print(f"NUTS, {NUM_CHAINS} chains x ({NUM_WARMUP} warmup + "
+          f"{NUM_SAMPLES} samples), one jit-compiled executor per variant\n")
+
+    _, diag_c = run(eight_schools)
+    noncentered = reparam(eight_schools,
+                          config={"theta": LocScaleReparam(0.0)})
+    mcmc_nc, diag_nc = run(noncentered)
+
+    print(f"{'variant':<14} {'site':<18} {'max R-hat':>10} {'min ESS':>8}")
+    for tag, diag in [("centered", diag_c), ("non-centered", diag_nc)]:
+        for site, (rhat, ess) in diag.items():
+            print(f"{tag:<14} {site:<18} {rhat:>10.3f} {ess:>8.0f}")
+
+    worst_c = max(r for r, _ in diag_c.values())
+    worst_nc = max(r for r, _ in diag_nc.values())
+    print(f"\ncentered      worst R-hat: {worst_c:.3f} "
+          f"({'FAILS' if worst_c >= 1.05 else 'passes'} the 1.05 cut)")
+    print(f"non-centered  worst R-hat: {worst_nc:.3f} "
+          f"({'FAILS' if worst_nc >= 1.05 else 'passes'} the 1.05 cut)")
+    assert worst_nc < 1.05, "non-centered chains failed to converge"
+
+    # the reparameterized model still exposes `theta`: Predictive substitutes
+    # the posterior draws of (mu, tau, theta_decentered) and the handler
+    # recomputes theta as its deterministic function, batched under vmap
+    post = Predictive(noncentered, mcmc_nc.get_samples(),
+                      return_sites=["theta", "obs"])(random.PRNGKey(1))
+    print(f"\nposterior-predictive theta mean per school: "
+          f"{jnp.round(post['theta'].mean(0), 1)}")
+    print(f"posterior-predictive obs   shape: {post['obs'].shape}")
+
+
+if __name__ == "__main__":
+    main()

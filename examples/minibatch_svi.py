@@ -1,0 +1,70 @@
+"""Stochastic minibatch VI on logistic regression via plate subsampling.
+
+The model below is written once, full-batch; passing ``subsample_size=B``
+makes the plate draw a fresh random minibatch of indices *inside* the model
+on every SVI step (seeded from the SVI state's rng key), ``subsample`` picks
+the matching data rows, and the plate rescales the minibatch likelihood by
+``N / B`` so the ELBO estimate stays unbiased.  Because ``SVI.update`` is a
+pure function of ``(state, data)``, ``jax.jit(svi.update)`` compiles exactly
+one step program and reuses it for every minibatch.
+
+    PYTHONPATH=src python examples/minibatch_svi.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+import repro.core as pc
+from repro import optim
+from repro.core import dist
+from repro.core.infer import SVI, AutoNormal, Trace_ELBO
+
+N, D, B = 1000, 3, 100
+TRUE_COEFS = jnp.array([1.0, 2.0, 3.0])
+
+
+def make_model(subsample_size=None):
+    def model(x, y=None):
+        m = pc.sample("m", dist.Normal(0.0, jnp.ones(D)).to_event(1))
+        b = pc.sample("b", dist.Normal(0.0, 1.0))
+        with pc.plate("N", N, subsample_size=subsample_size):
+            xb = pc.subsample(x, event_dim=1)
+            yb = pc.subsample(y, event_dim=0) if y is not None else None
+            pc.sample("y", dist.Bernoulli(logits=xb @ m + b), obs=yb)
+    return model
+
+
+def fit(model, x, y, num_steps, seed=1):
+    guide = AutoNormal(model)
+    svi = SVI(model, guide, optim.adam(5e-2), Trace_ELBO())
+    state = svi.init(random.PRNGKey(seed), x, y)
+    step = jax.jit(svi.update)
+    t0 = time.time()
+    for _ in range(num_steps):
+        state, loss = step(state, x, y)
+    elapsed = time.time() - t0
+    return guide.median(svi.get_params(state))["m"], float(loss), elapsed
+
+
+def main():
+    x = random.normal(random.PRNGKey(0), (N, D))
+    y = dist.Bernoulli(logits=x @ TRUE_COEFS).sample(rng_key=random.PRNGKey(3))
+
+    m_full, loss_full, t_full = fit(make_model(), x, y, num_steps=1000)
+    m_mb, loss_mb, t_mb = fit(make_model(subsample_size=B), x, y,
+                              num_steps=2000)
+
+    print(f"true coefficients:           {TRUE_COEFS}")
+    print(f"full-batch   (N={N}):  {jnp.round(m_full, 2)}  "
+          f"[1000 steps, {t_full:.1f}s]")
+    print(f"minibatch    (B={B}):   {jnp.round(m_mb, 2)}  "
+          f"[2000 steps, {t_mb:.1f}s, one compiled step]")
+    gap = float(jnp.max(jnp.abs(m_mb - m_full)))
+    print(f"max |minibatch - full|: {gap:.3f}")
+    assert gap < 0.5, "minibatch VI diverged from the full-batch optimum"
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,8 @@
 # if this package's own init hasn't returned yet.
 from . import handlers, primitives
 from . import dist
-from .primitives import deterministic, param, plate, sample
+from . import reparam
+from .primitives import deterministic, param, plate, sample, subsample
 
-__all__ = ["dist", "handlers", "primitives", "sample", "param",
-           "deterministic", "plate"]
+__all__ = ["dist", "handlers", "primitives", "reparam", "sample", "param",
+           "deterministic", "plate", "subsample"]

@@ -27,10 +27,16 @@ from .continuous import (
     StudentT,
 )
 from .discrete import Bernoulli, Categorical
-from .distribution import Distribution, ExpandedDistribution, Independent
-from .transforms import biject_to
+from .distribution import (
+    Distribution,
+    ExpandedDistribution,
+    Independent,
+    TransformedDistribution,
+)
+from .transforms import AffineTransform, biject_to
 
 __all__ = [
+    "AffineTransform",
     "Bernoulli",
     "Beta",
     "Categorical",
@@ -49,6 +55,7 @@ __all__ = [
     "MultivariateNormal",
     "Normal",
     "StudentT",
+    "TransformedDistribution",
     "biject_to",
     "constraints",
     "transforms",

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import constraints
+from . import transforms as transforms_mod
 
 
 class Distribution:
@@ -214,3 +215,124 @@ class ExpandedDistribution(Distribution):
 
     def expand(self, batch_shape):
         return ExpandedDistribution(self.base_dist, tuple(batch_shape))
+
+
+def _sum_rightmost(value, k):
+    """Sum an array over its rightmost ``k`` dimensions (no-op for k == 0)."""
+    return jnp.sum(value, axis=tuple(range(-k, 0))) if k > 0 else value
+
+
+def _chain_forward(transforms, x):
+    for t in transforms:
+        x = t(x)
+    return x
+
+
+class TransformedDistribution(Distribution):
+    """Push a base distribution through a chain of bijective transforms.
+
+    ``sample`` draws from ``base_distribution`` and applies the transforms
+    left-to-right; ``log_prob`` inverts right-to-left and subtracts each
+    transform's log-|det Jacobian| (change of variables).  Only
+    elementwise/shape-preserving transforms (``AffineTransform``,
+    ``ExpTransform``, ``Sigmoid...``) are supported here — which is exactly
+    what ``TransformReparam`` needs to split a site into a base draw plus a
+    deterministic transform.  Batched transform parameters broadcast: the
+    forward output shape is computed abstractly and the base distribution is
+    expanded to it, so every output component gets an *independent* base draw
+    (``TransformedDistribution(Normal(0., 1.), AffineTransform(locs, scales))``
+    with ``(8,)`` params has ``batch_shape (8,)``, not a shared epsilon).
+
+    Note: transform parameters (e.g. ``AffineTransform.loc``) ride in the
+    pytree *aux* data, so instances should live within a single trace rather
+    than crossing ``jit``/``lax`` boundaries as carried state.
+    """
+
+    arg_constraints: dict = {}
+
+    def __init__(self, base_distribution, transforms):
+        if isinstance(transforms, transforms_mod.Transform):
+            transforms = [transforms]
+        if not transforms:
+            raise ValueError("TransformedDistribution needs >= 1 transform")
+        self.transforms = list(transforms)
+        # abstract forward pass: find the broadcast output shape without
+        # running any compute (transform params may be traced)
+        out = jax.eval_shape(
+            lambda z: _chain_forward(self.transforms, z),
+            jax.ShapeDtypeStruct(base_distribution.shape(),
+                                 jnp.result_type(float)))
+        event_dim = base_distribution.event_dim
+        if out.shape[len(out.shape) - event_dim:] \
+                != base_distribution.event_shape:
+            raise ValueError(
+                f"transforms changed the event shape "
+                f"{base_distribution.event_shape} -> {out.shape}: only "
+                "shape-preserving (elementwise, batch-broadcasting) "
+                "transforms are supported")
+        batch_shape = out.shape[:len(out.shape) - event_dim]
+        if batch_shape != base_distribution.batch_shape:
+            base_distribution = base_distribution.expand(batch_shape)
+        self.base_dist = base_distribution
+        super().__init__(batch_shape, base_distribution.event_shape)
+
+    def tree_flatten(self):
+        return (self.base_dist,), (tuple(self.transforms),)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], list(aux[0]))
+
+    @property
+    def support(self):
+        # the final transform's codomain is only the support if every earlier
+        # transform maps onto the final one's full domain; a constraining
+        # transform followed by e.g. an affine has a support we cannot
+        # represent — fail loudly at setup rather than hand NUTS/autoguides a
+        # wrong bijection that NaNs silently mid-chain
+        base_support = self.base_dist.support
+        if base_support is not None and not isinstance(
+                base_support, (type(constraints.real),
+                               type(constraints.real_vector))):
+            raise NotImplementedError(
+                f"support of a transformed {type(self.base_dist).__name__} "
+                f"(base support {base_support!r}) is not representable: the "
+                "transform image of a constrained base is not the final "
+                "transform's codomain. Express the constraint as a transform "
+                "from an unconstrained base instead")
+        for t in self.transforms[:-1]:
+            if not isinstance(t.codomain, type(constraints.real)):
+                raise NotImplementedError(
+                    f"support of a transform chain with a constraining "
+                    f"non-final transform ({type(t).__name__}) is not "
+                    "representable; put the constraining transform last, or "
+                    "reparameterize the site (TransformReparam) so inference "
+                    "sees only the base distribution")
+        return self.transforms[-1].codomain
+
+    def sample(self, rng_key=None, sample_shape=()):
+        x = self.base_dist.sample(rng_key=rng_key, sample_shape=sample_shape)
+        return _chain_forward(self.transforms, x)
+
+    def log_prob(self, value):
+        event_dim = self.event_dim
+        # broadcast up-front so the ndim bookkeeping below sees the full
+        # batch dims (a scalar value against batched transform params would
+        # otherwise have its per-component Jacobians miscounted as event
+        # dims and summed)
+        value = jnp.broadcast_to(
+            value, jnp.broadcast_shapes(jnp.shape(value), self.shape()))
+        y = value
+        log_det = 0.0
+        for t in reversed(self.transforms):
+            x = t.inv(y)
+            ladj = t.log_abs_det_jacobian(x, y)
+            # elementwise ladj has value's ndim; transforms that already
+            # reduced their event dims contribute with no further reduction
+            extra = jnp.ndim(ladj) - (jnp.ndim(value) - event_dim)
+            log_det = log_det + _sum_rightmost(ladj, max(extra, 0))
+            y = x
+        return self.base_dist.log_prob(y) - log_det
+
+    def expand(self, batch_shape):
+        return ExpandedDistribution(self, tuple(batch_shape))

@@ -23,6 +23,7 @@ from . import constraints
 
 __all__ = [
     "Transform",
+    "AffineTransform",
     "IdentityTransform",
     "ExpTransform",
     "SigmoidTransform",
@@ -60,6 +61,29 @@ class IdentityTransform(Transform):
 
     def log_abs_det_jacobian(self, x, y):
         return jnp.zeros_like(x)
+
+
+class AffineTransform(Transform):
+    """``x -> loc + scale * x`` (elementwise; ``scale`` must be nonzero).
+
+    The workhorse of non-centered reparameterizations:
+    ``TransformedDistribution(Normal(0, 1), AffineTransform(mu, tau))`` is
+    ``Normal(mu, tau)`` with the location/scale split out as a deterministic
+    transform that ``TransformReparam`` can peel off.
+    """
+
+    def __init__(self, loc, scale):
+        self.loc = loc
+        self.scale = scale
+
+    def __call__(self, x):
+        return self.loc + self.scale * x
+
+    def inv(self, y):
+        return (y - self.loc) / self.scale
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.broadcast_to(jnp.log(jnp.abs(self.scale)), jnp.shape(x))
 
 
 class ExpTransform(Transform):

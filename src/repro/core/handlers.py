@@ -4,6 +4,24 @@ A handler is a context manager that sits on the global stack and rewrites
 messages produced by the primitives.  Because handlers execute in the Python
 runtime during tracing, they are invisible to JAX and compose with ``jit``,
 ``grad``, ``vmap``, ``pjit`` and ``shard_map``.
+
+Each handler acts through one (or both) of two hooks — the docstrings below
+state which:
+
+- ``process_message`` runs innermost-handler-first, *before* the site value
+  exists; it is where values are injected (``replay``/``substitute``/
+  ``condition``/``do``), names rewritten (``scope``), distributions replaced
+  (``reparam``), rng keys threaded (``seed``), and density ``scale``/``mask``
+  accumulated (``scale``/``mask``/``plate``).
+- ``postprocess_message`` runs outermost-first *after* the value exists; it
+  is where results are recorded (``trace``).
+
+``scale`` and ``mask`` entries written here are consumed once, by
+:func:`repro.core.infer.util.log_density` (shared by SVI, ``potential_energy``
+and ``initialize_model_structure``), as ``where(mask, log_prob, 0) * scale``.
+
+See ``docs/handlers.md`` for runnable examples and the handler × JAX-transform
+composition matrix.
 """
 from __future__ import annotations
 
@@ -28,12 +46,7 @@ class Messenger:
     def __exit__(self, exc_type, exc_value, tb):
         if exc_type is None:
             assert stack()[-1] is self
-            stack().pop()
-        else:  # unwind robustly on exceptions raised mid-trace
-            if self in stack():
-                while stack() and stack()[-1] is not self:
-                    stack().pop()
-                stack().pop()
+        primitives.pop_from_stack(self)
         return False
 
     def process_message(self, msg: dict) -> None:  # innermost -> outermost
@@ -50,7 +63,13 @@ class Messenger:
 
 
 class trace(Messenger):
-    """Record every primitive site into an :class:`OrderedDict`."""
+    """Record every primitive site into an :class:`OrderedDict`.
+
+    Effect: ``postprocess_message`` — copies each finished ``sample`` /
+    ``param`` / ``deterministic`` / ``plate`` message (the last so that a
+    subsampled plate's minibatch indices are part of the trace and can be
+    ``replay``-ed).  Never alters values, scales, or masks.
+    """
 
     def __enter__(self):
         super().__enter__()
@@ -59,7 +78,7 @@ class trace(Messenger):
 
     def postprocess_message(self, msg: dict) -> None:
         name = msg["name"]
-        if msg["type"] in ("sample", "param", "deterministic"):
+        if msg["type"] in ("sample", "param", "deterministic", "plate"):
             if name in self._trace:
                 raise ValueError(f"duplicate site name '{name}' in trace")
             self._trace[name] = msg.copy()
@@ -70,7 +89,13 @@ class trace(Messenger):
 
 
 class replay(Messenger):
-    """Replay sample statements against values recorded in ``guide_trace``."""
+    """Replay sample statements against values recorded in ``guide_trace``.
+
+    Effect: ``process_message`` — injects the recorded value for matching
+    latent ``sample`` sites (observedness is preserved: replayed sites stay
+    latent) and for ``plate`` sites, so replaying a trace recorded from a
+    subsampled model reproduces the *same minibatch indices*.
+    """
 
     def __init__(self, fn=None, guide_trace: Optional[dict] = None):
         super().__init__(fn)
@@ -81,16 +106,31 @@ class replay(Messenger):
     def process_message(self, msg: dict) -> None:
         name = msg["name"]
         if msg["type"] == "sample" and name in self.guide_trace:
+            if msg["is_observed"]:
+                return  # observed here: the data, not the recording, wins
             guide_msg = self.guide_trace[name]
-            if guide_msg["type"] != "sample" or guide_msg["is_observed"]:
-                raise RuntimeError(f"site {name} must be a latent sample in the guide")
+            if guide_msg["type"] != "sample":
+                raise RuntimeError(f"site {name} must be a sample site in the guide")
+            if guide_msg["is_observed"]:
+                # recorded as data but latent here: resampling silently would
+                # score a different execution than the recording
+                raise RuntimeError(
+                    f"site '{name}' was recorded as observed but is latent in "
+                    "the replayed model; condition the model on the same data")
             msg["value"] = guide_msg["value"]
+        elif msg["type"] == "plate" and name in self.guide_trace:
+            guide_msg = self.guide_trace[name]
+            if guide_msg["type"] == "plate":
+                msg["value"] = guide_msg["value"]
 
 
 class seed(Messenger):
-    """Seed ``fn`` with a PRNGKey; every interior ``sample`` splits it.
+    """Seed ``fn`` with a PRNGKey; every interior random site splits it.
 
-    This abstracts JAX's functional PRNG away from model code (Sec. 2).
+    Effect: ``process_message`` — for each unvalued ``sample`` site, lazily
+    initialized ``param`` site, and subsampled ``plate`` index draw that has
+    no explicit ``rng_key``, split the carried key and hand the subkey to the
+    site.  This abstracts JAX's functional PRNG away from model code (Sec. 2).
     """
 
     def __init__(self, fn=None, rng_seed=None):
@@ -106,6 +146,8 @@ class seed(Messenger):
             msg["type"] == "sample"
             and not msg["is_observed"]
             and msg["kwargs"].get("rng_key") is None
+        ) or (msg["type"] == "plate" and msg["value"] is None
+              and msg["kwargs"].get("rng_key") is None
         ) or (msg["type"] == "param" and msg["kwargs"].get("rng_key") is None
               and msg["value"] is None):
             self.rng_key, subkey = jax.random.split(self.rng_key)
@@ -118,6 +160,17 @@ class seed(Messenger):
                 msg["fn"] = lambda *a, **kw: init_fn(key, shape, dtype)
 
 
+# A deterministic site can't take a value: it is computed, not drawn.  The
+# common way to hit this is {handler} outside a `reparam` that rewrote the
+# site — by the time the message reaches the outer handler it is already
+# deterministic, and dropping the data silently would corrupt the density.
+_REPARAMED_SITE_ERR = (
+    "cannot {handler} deterministic site '{name}' (it is a computed value — "
+    "likely a reparameterized site). Target its auxiliary sites instead "
+    "(e.g. '{name}_decentered' / '{name}_base'), or drop the site's reparam "
+    "strategy.")
+
+
 def _default_param_init(key, shape, dtype):
     if len(shape) == 0:
         return jnp.zeros(shape, dtype)
@@ -127,11 +180,13 @@ def _default_param_init(key, shape, dtype):
 
 
 class substitute(Messenger):
-    """Substitute values for ``sample``/``param`` sites.
+    """Substitute values for ``sample``/``param``/``plate`` sites.
 
-    Unlike :class:`condition`, substituted sample sites stay *unobserved* —
-    they contribute to the joint density as latents (used by inference to
-    evaluate the density at a proposed point).
+    Effect: ``process_message`` — sets ``msg['value']`` from ``data`` (or
+    ``substitute_fn(msg)``).  Unlike :class:`condition`, substituted sample
+    sites stay *unobserved* — they contribute to the joint density as latents
+    (used by inference to evaluate the density at a proposed point).
+    Substituting a ``plate`` site pins that plate's minibatch indices.
     """
 
     def __init__(self, fn=None, data: Optional[Dict] = None,
@@ -143,31 +198,55 @@ class substitute(Messenger):
         self.substitute_fn = substitute_fn
 
     def process_message(self, msg: dict) -> None:
-        if msg["type"] not in ("sample", "param"):
+        if msg["type"] not in ("sample", "param", "plate", "deterministic"):
             return
         if self.data is not None:
             value = self.data.get(msg["name"])
         else:
             value = self.substitute_fn(msg)
-        if value is not None:
-            msg["value"] = value
+        if value is None:
+            return
+        if msg["type"] == "deterministic":
+            if msg["infer"].get("reparamed"):
+                # the value would be silently recomputed over our head
+                raise ValueError(_REPARAMED_SITE_ERR.format(
+                    handler="substitute", name=msg["name"]))
+            return  # ordinary deterministic: recomputed from the same
+                    # substituted latents, so the injection is redundant
+        msg["value"] = value
 
 
 class condition(Messenger):
-    """Condition unobserved sample sites on the given values (Table 1)."""
+    """Condition unobserved sample sites on the given values (Table 1).
+
+    Effect: ``process_message`` — sets the value *and* marks the site
+    observed, so the site is scored as data (its density still respects any
+    accumulated ``scale``/``mask``) and downstream handlers (``seed``) stop
+    treating it as a random draw.
+    """
 
     def __init__(self, fn=None, data: Optional[Dict] = None):
         super().__init__(fn)
         self.data = data or {}
 
     def process_message(self, msg: dict) -> None:
+        if msg["type"] == "deterministic" and msg["name"] in self.data \
+                and msg["infer"].get("reparamed"):
+            raise ValueError(_REPARAMED_SITE_ERR.format(
+                handler="condition", name=msg["name"]))
         if msg["type"] == "sample" and msg["name"] in self.data:
             msg["value"] = self.data[msg["name"]]
             msg["is_observed"] = True
 
 
 class block(Messenger):
-    """Hide selected sites from outer handlers."""
+    """Hide selected sites from outer handlers.
+
+    Effect: ``process_message`` — sets ``msg['stop'] = True`` for matching
+    sites, so ``apply_stack`` stops propagating the message outward: an outer
+    ``trace`` won't record it, an outer ``seed`` won't key it.  Handlers
+    *inside* the block still see the site.
+    """
 
     def __init__(self, fn=None, hide_fn: Optional[Callable] = None,
                  hide: Optional[list] = None, expose: Optional[list] = None):
@@ -187,7 +266,13 @@ class block(Messenger):
 
 
 class mask(Messenger):
-    """Mask out (boolean) parts of a site's log density."""
+    """Mask out (boolean) parts of a site's log density.
+
+    Effect: ``process_message`` — ANDs the boolean ``mask`` into each sample
+    message.  ``log_density`` zeroes masked elements *before* applying
+    ``scale``, so ``mask`` wins over ``scale`` regardless of handler nesting
+    order (the two accumulate independently and commute).
+    """
 
     def __init__(self, fn=None, mask=None):
         super().__init__(fn)
@@ -200,7 +285,12 @@ class mask(Messenger):
 
 
 class scale(Messenger):
-    """Rescale the log density of enclosed sites (e.g. data subsampling)."""
+    """Rescale the log density of enclosed sites (e.g. data subsampling).
+
+    Effect: ``process_message`` — multiplies into each sample message's
+    ``scale`` (so nested ``scale`` handlers and subsampled plates compose
+    multiplicatively).  Consumed once by ``log_density``.
+    """
 
     def __init__(self, fn=None, scale=1.0):
         super().__init__(fn)
@@ -217,19 +307,140 @@ class scale(Messenger):
 
 class do(Messenger):
     """Intervention: clamp a sample site to a value *without* observing it,
-    severing its dependence on upstream randomness (causal ``do``-operator)."""
+    severing its dependence on upstream randomness (causal ``do``-operator).
+
+    Effect: ``process_message`` — sets the value and ``stop``s the message,
+    so outer handlers (including ``trace``) never see the site; downstream
+    computation uses the clamped value.
+    """
 
     def __init__(self, fn=None, data: Optional[Dict] = None):
         super().__init__(fn)
         self.data = data or {}
 
     def process_message(self, msg: dict) -> None:
+        if msg["type"] == "deterministic" and msg["name"] in self.data \
+                and msg["infer"].get("reparamed"):
+            raise ValueError(_REPARAMED_SITE_ERR.format(
+                handler="do", name=msg["name"]))
         if msg["type"] == "sample" and msg["name"] in self.data:
             msg["value"] = self.data[msg["name"]]
             msg["stop"] = True
 
 
+class scope(Messenger):
+    """Prefix every interior site name with ``prefix + divider``.
+
+    Effect: ``process_message`` — rewrites ``msg['name']`` for all named
+    message types (``sample``/``param``/``deterministic``/``plate``), which
+    lets one model be instantiated several times in a larger program without
+    site-name collisions.  Nested scopes compose outside-in:
+    ``scope(scope(f, prefix='a'), prefix='b')`` yields ``b/a/site``.
+    """
+
+    def __init__(self, fn=None, prefix: str = "", divider: str = "/"):
+        super().__init__(fn)
+        if not prefix:
+            raise ValueError("scope requires a non-empty prefix")
+        self.prefix = prefix
+        self.divider = divider
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] in ("sample", "param", "deterministic", "plate"):
+            msg["name"] = f"{self.prefix}{self.divider}{msg['name']}"
+
+
+class infer_config(Messenger):
+    """Update per-site inference configuration.
+
+    Effect: ``process_message`` — for ``sample``/``param`` sites, merges
+    ``config_fn(msg)`` (a dict, may be empty) into ``msg['infer']``.
+    Inference code reads ``site['infer']`` from traces (e.g. autoguides skip
+    sites marked ``{"is_auxiliary": True}``); values never affect the density.
+    """
+
+    def __init__(self, fn=None, config_fn: Optional[Callable] = None):
+        super().__init__(fn)
+        if config_fn is None:
+            raise ValueError("infer_config requires a config_fn")
+        self.config_fn = config_fn
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] in ("sample", "param"):
+            extra = self.config_fn(msg)
+            if extra:
+                msg["infer"].update(extra)
+
+
+class reparam(Messenger):
+    """Reparameterize latent sample sites (see :mod:`repro.core.reparam`).
+
+    Effect: ``process_message`` — looks up a strategy for the site (``config``
+    is a dict ``name -> Reparam`` or a callable ``msg -> Reparam | None``) and
+    calls it as ``new_fn, value = strategy(name, fn, obs)``.  The strategy
+    typically issues *auxiliary* sample statements (e.g. ``f"{name}_decentered"``)
+    which re-enter the handler stack normally — they are seeded, traced, and
+    substitutable like any hand-written site.  If ``new_fn`` is None the
+    original site becomes a ``deterministic`` function of the auxiliaries
+    (it no longer contributes to the joint density; the auxiliaries do), which
+    is how ``LocScaleReparam`` turns a centered funnel into its non-centered
+    form without touching model code.
+
+    Compose ``reparam`` *innermost* (directly around the model) so strategies
+    see sites before ``seed``/``trace``; plates still apply first because they
+    are entered inside the model itself.  Strategy-emitted sites carry
+    ``infer={"reparam_auxiliary": True}`` and are never reparameterized again,
+    so a callable config that matches broadly (even ``lambda msg:
+    LocScaleReparam(0.0)``) terminates instead of recursing.
+    """
+
+    def __init__(self, fn=None, config=None):
+        super().__init__(fn)
+        if config is None or not (callable(config) or isinstance(config, dict)):
+            raise ValueError("reparam requires a config dict or callable")
+        self.config = config
+
+    def process_message(self, msg: dict) -> None:
+        if msg["type"] != "sample":
+            return
+        if msg["infer"].get("reparam_auxiliary"):
+            return  # a strategy's own site re-entering the stack: never
+                    # reparameterize it again (a callable config would recurse)
+        if callable(self.config) and not isinstance(self.config, dict):
+            strategy = self.config(msg)
+        else:
+            strategy = self.config.get(msg["name"])
+        if strategy is None:
+            return
+        if msg["value"] is not None and not msg["is_observed"]:
+            # an inner substitute/replay already pinned this site; sampling
+            # fresh auxiliaries would silently evaluate elsewhere
+            raise ValueError(
+                f"site '{msg['name']}' has a substituted/replayed value but "
+                "is configured for reparameterization — the strategy would "
+                "ignore it. Pin the auxiliary sites (e.g. "
+                f"'{msg['name']}_decentered' / '{msg['name']}_base') instead.")
+        obs = msg["value"] if msg["is_observed"] else None
+        new_fn, value = strategy(msg["name"], msg["fn"], obs)
+        if new_fn is None:
+            # site is now a pure function of its auxiliaries; the marker lets
+            # outer substitute/condition/do distinguish it from an ordinary
+            # deterministic site (whose value injection is harmlessly
+            # redundant) and fail loudly instead of dropping data
+            msg["type"] = "deterministic"
+            msg["value"] = value
+            msg["is_observed"] = False
+            msg["fn"] = lambda *a, **kw: value
+            msg["args"] = ()
+            msg["kwargs"] = {}
+            msg["infer"]["reparamed"] = True
+            return
+        msg["fn"] = new_fn
+        if value is not None:
+            msg["value"] = value
+
+
 __all__ = [
     "Messenger", "trace", "replay", "seed", "substitute", "condition",
-    "block", "mask", "scale", "do",
+    "block", "mask", "scale", "do", "scope", "infer_config", "reparam",
 ]

@@ -25,6 +25,31 @@ class AutoNormal:
     def _setup(self, *args, **kwargs):
         if self._transforms is None:
             transforms, tr = get_model_transforms(self.model, args, kwargs)
+            # sites marked auxiliary (e.g. by another guide's machinery or an
+            # infer_config handler) are not model latents to be fit
+            transforms = {
+                n: t for n, t in transforms.items()
+                if not tr[n]["infer"].get("is_auxiliary")
+            }
+            # local latents inside a *subsampled* plate have no meaningful
+            # mean-field fit: the model redraws a different minibatch each
+            # step while the guide's fixed minibatch-sized parameters would
+            # be scored against arbitrary rows. (Subsampled plates are
+            # recognizable as recorded "plate" sites — full-size plates emit
+            # no message.)
+            subsampled = {name for name, site in tr.items()
+                          if site["type"] == "plate"}
+            for n in transforms:
+                hit = [f.name for f in tr[n]["cond_indep_stack"]
+                       if f.name in subsampled]
+                if hit:
+                    raise ValueError(
+                        f"AutoNormal cannot fit local latent '{n}' inside "
+                        f"subsampled plate(s) {hit}: each SVI step draws a "
+                        "different minibatch, so fixed minibatch-sized "
+                        "parameters would be scored against arbitrary data "
+                        "rows. Use a full-size plate for local latents, or "
+                        "write an amortized guide")
             self._transforms = transforms
             self._shapes = {
                 n: jnp.shape(transforms[n].inv(tr[n]["value"]))

@@ -14,7 +14,15 @@ from .util import log_density
 
 class Trace_ELBO:
     """Monte Carlo ELBO.  ``num_particles > 1`` estimates are vectorized with
-    ``vmap`` over PRNG keys — no batching logic in model or guide."""
+    ``vmap`` over PRNG keys — no batching logic in model or guide.
+
+    Both the model and guide densities flow through the unified
+    :func:`~repro.core.infer.util.log_density`, so plate ``size /
+    subsample_size`` scaling (and ``scale``/``mask`` handlers) apply
+    automatically: a model that draws a random minibatch via
+    ``plate(..., subsample_size=B)`` + ``subsample`` yields an unbiased
+    stochastic estimate of the full-data ELBO, with a fresh minibatch per
+    step keyed from the SVI state's rng."""
 
     def __init__(self, num_particles: int = 1):
         self.num_particles = num_particles
@@ -44,7 +52,22 @@ class SVIState(NamedTuple):
 
 
 class SVI:
-    """SVI driver: functional, so ``update`` jits and ``run`` lax.scans."""
+    """SVI driver: functional, so ``update`` jits and ``run`` lax.scans.
+
+    Minibatch pattern — because ``update`` is a pure function of ``(state,
+    *args)``, one ``jax.jit(svi.update)`` program is compiled for the
+    minibatch *shape* and reused across every minibatch (data arrives as a
+    traced argument, never baked into the executable)::
+
+        step = jax.jit(svi.update)
+        state = svi.init(rng, x_batch0, y_batch0)
+        for xb, yb in batches:          # same shapes => zero recompiles
+            state, loss = step(state, xb, yb)
+
+    Models that subsample internally (``plate(..., subsample_size=B)``) can
+    instead pass the full data every step; the plate draws a fresh random
+    minibatch from the state's rng key inside the compiled program.
+    """
 
     def __init__(self, model, guide, optim, loss: Trace_ELBO):
         self.model = model
@@ -91,6 +114,13 @@ class SVI:
 
         state, losses = lax.scan(body, state, None, length=num_steps)
         return state, losses
+
+    def evaluate(self, state: SVIState, *args, **kwargs):
+        """Loss at the current params without advancing the state (uses the
+        state's rng key; pure, so it is safe to ``jit``)."""
+        _, key_loss = jax.random.split(state.rng_key)
+        return self.loss.loss(key_loss, state.params, self.model, self.guide,
+                              *args, **kwargs)
 
     def get_params(self, state: SVIState):
         return state.params

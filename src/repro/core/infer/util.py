@@ -3,6 +3,7 @@ model initialization, and vmap-powered predictive utilities (paper Sec 3.2).
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Callable, Dict, Optional
 
@@ -19,8 +20,16 @@ from ..primitives import sample as _sample
 def log_density(model, model_args, model_kwargs, params):
     """Joint log density of ``model`` at ``params`` (constrained space).
 
-    Returns ``(log_joint, trace)``.  Respects per-site ``scale`` and ``mask``
-    set by handlers/plates.
+    Returns ``(log_joint, trace)``.  This is the *single* density accumulator
+    in the system — ``Trace_ELBO``, :func:`potential_energy` (and through it
+    HMC/NUTS via :func:`initialize_model_structure`) all reduce to it — so the
+    message-protocol contract is honored in exactly one place: per-site
+    ``mask`` zeroes elements *before* the multiplicative ``scale`` applies
+    (handlers accumulate both; see :mod:`repro.core.handlers`), and only
+    ``sample`` sites contribute (``param``/``deterministic``/``plate`` sites
+    carry no density).  A subsampled plate therefore yields an unbiased
+    minibatch estimate of the full-data log density: each enclosed site is
+    scaled by ``size / subsample_size``.
     """
     substituted = substitute(model, data=params)
     tr = trace(substituted).get_trace(*model_args, **model_kwargs)
@@ -189,43 +198,94 @@ def initialize_model(rng_key, model, model_args=(), model_kwargs=None,
 # ---------------------------------------------------------------------------
 
 class Predictive:
-    """Vectorized prior/posterior predictive sampling via ``vmap`` over
-    seeded + substituted model executions — no manual batch dims in the model.
+    """Vectorized prior/posterior predictive sampling.
+
+    Composes the paper's three handlers per draw — ``seed`` (fresh key),
+    ``substitute`` (pin latents to one posterior draw), ``trace`` (collect
+    every site) — and batches the whole composition over posterior draws with
+    ``vmap``, so models never carry manual batch dimensions:
+
+    - *prior predictive*: ``Predictive(model, num_samples=N)`` — nothing is
+      substituted, every site is a fresh draw.
+    - *posterior predictive*: ``Predictive(model, posterior_samples=samples)``
+      — latents are pinned per-draw, remaining (observed-site) distributions
+      are sampled.
+
+    ``posterior_samples`` leaves are ``(num_samples, ...)`` arrays
+    (``batch_ndims=1``, e.g. ``MCMC.get_samples()``) or ``(num_chains,
+    num_samples, ...)`` (``batch_ndims=2``, chain-grouped — outputs keep the
+    chain axis).  ``return_sites`` restricts the output (deterministic sites,
+    e.g. reparameterized originals, are legal targets); by default all sample
+    and deterministic sites not substituted are returned.  ``parallel=False``
+    falls back to a Python loop for models that cannot be vmapped.
     """
 
     def __init__(self, model, posterior_samples: Optional[Dict] = None,
                  num_samples: Optional[int] = None, return_sites=None,
-                 parallel: bool = True):
-        if posterior_samples is None and num_samples is None:
-            raise ValueError("need posterior_samples or num_samples")
+                 parallel: bool = True, batch_ndims: int = 1):
+        if batch_ndims not in (1, 2):
+            raise ValueError(f"batch_ndims must be 1 or 2, got {batch_ndims}")
         self.model = model
         self.posterior_samples = posterior_samples or {}
-        if posterior_samples is not None:
-            sizes = {jnp.shape(v)[0] for v in posterior_samples.values()}
-            if len(sizes) != 1:
-                raise ValueError("inconsistent posterior sample counts")
-            num_samples = sizes.pop()
+        self.batch_ndims = batch_ndims
+        self._batch_shape = None
+        if self.posterior_samples:
+            if num_samples is not None:
+                raise ValueError(
+                    "num_samples is determined by posterior_samples; passing "
+                    "both is ambiguous")
+            shapes = {jnp.shape(v)[:batch_ndims]
+                      for v in self.posterior_samples.values()}
+            if len(shapes) != 1:
+                raise ValueError(
+                    f"inconsistent posterior sample batch shapes: {shapes}")
+            self._batch_shape = shapes.pop()
+            num_samples = math.prod(self._batch_shape)
+        elif num_samples is None:
+            raise ValueError("need posterior_samples or num_samples")
         self.num_samples = num_samples
         self.return_sites = return_sites
         self.parallel = parallel
 
     def __call__(self, rng_key, *args, **kwargs):
+        # flatten chain-grouped draws to one vmapped batch axis
+        flat_samples = self.posterior_samples
+        if self._batch_shape is not None and self.batch_ndims == 2:
+            flat_samples = jax.tree_util.tree_map(
+                lambda v: v.reshape((self.num_samples,)
+                                    + v.shape[self.batch_ndims:]),
+                flat_samples)
+
         def single(key, samples):
             m = substitute(seed(self.model, key), data=samples)
             tr = trace(m).get_trace(*args, **kwargs)
-            sites = self.return_sites or [
-                n for n, s in tr.items()
-                if s["type"] in ("sample", "deterministic") and n not in samples
-            ]
+            if self.return_sites is not None:
+                missing = [n for n in self.return_sites if n not in tr]
+                if missing:
+                    raise ValueError(
+                        f"return_sites {missing} not found in model trace "
+                        f"(available: {list(tr)})")
+                sites = self.return_sites
+            else:
+                sites = [
+                    n for n, s in tr.items()
+                    if s["type"] in ("sample", "deterministic")
+                    and n not in samples
+                ]
             return {n: tr[n]["value"] for n in sites}
 
         keys = jax.random.split(rng_key, self.num_samples)
         if self.parallel:
-            return jax.vmap(single)(keys, self.posterior_samples)
-        outs = [single(k, jax.tree_util.tree_map(lambda v: v[i],
-                                                 self.posterior_samples))
-                for i, k in enumerate(keys)]
-        return jax.tree_util.tree_map(lambda *x: jnp.stack(x), *outs)
+            out = jax.vmap(single)(keys, flat_samples)
+        else:
+            outs = [single(k, jax.tree_util.tree_map(lambda v: v[i],
+                                                     flat_samples))
+                    for i, k in enumerate(keys)]
+            out = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *outs)
+        if self._batch_shape is not None and self.batch_ndims == 2:
+            out = jax.tree_util.tree_map(
+                lambda v: v.reshape(self._batch_shape + v.shape[1:]), out)
+        return out
 
 
 def log_likelihood(model, posterior_samples, *args, **kwargs):

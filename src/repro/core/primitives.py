@@ -1,19 +1,53 @@
-"""Core language primitives: ``sample``, ``param``, ``deterministic``, ``plate``.
+"""Core language primitives: ``sample``, ``param``, ``deterministic``,
+``plate``, ``subsample``.
 
 These are the effectful statements of the probabilistic programming language.
 Each primitive constructs a *message* (a plain dict) and threads it through the
 handler stack (see :mod:`repro.core.handlers`).  Handlers run inside the Python
 runtime and are therefore transparent to the JAX tracer — they compose freely
 with ``jit``/``grad``/``vmap``/``pjit``/``shard_map`` (the paper's core claim).
+
+Message anatomy (the contract every handler programs against)::
+
+    {
+      "type":   "sample" | "param" | "deterministic" | "plate" | "subsample",
+      "name":   str,                  # site name (absent for "subsample")
+      "fn":     callable,             # produces "value" when it is None
+      "args", "kwargs":               # forwarded to fn; kwargs carries the
+                                      # functional rng_key for random sites
+      "value":  None | array,         # None until a handler / fn fills it
+      "is_observed": bool,            # True => value is data, not a draw
+      "scale":  None | float | array, # multiplicative log-density rescale
+      "mask":   None | bool array,    # boolean log-density mask
+      "cond_indep_stack": [CondIndepStackFrame, ...],   # enclosing plates
+      "infer":  dict,                 # per-site inference configuration
+      "stop":   bool (optional),      # set by `block`: hide from outer handlers
+    }
+
+``scale`` and ``mask`` are *accumulated* by handlers (``plate``, ``scale``,
+``mask``) during ``process_message`` and *consumed* exactly once, by
+:func:`repro.core.infer.util.log_density` — the single density accumulator
+shared by SVI, ``potential_energy`` and ``initialize_model_structure`` — as
+``sum(where(mask, log_prob, 0) * scale)``.
 """
 from __future__ import annotations
 
+import warnings
 from collections import namedtuple
+from functools import partial
 from typing import Any, Callable, Optional
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 _STACK: list = []  # the global effect-handler stack
+
+# Monotone counter of handler episodes: bumped every time the stack drains
+# back to empty (one model execution under its handlers = one episode).
+# plate uses it to scope its subsample-index cache — object identities are
+# useless for this because CPython reuses freed addresses.
+_EPISODE = 0
 
 
 def stack() -> list:
@@ -35,6 +69,23 @@ def default_process_message(msg: dict) -> None:
             msg["value"] = msg["fn"](*msg["args"], **msg["kwargs"])
 
 
+def pop_from_stack(handler) -> None:
+    """Remove ``handler`` from the stack, unwinding robustly: if an exception
+    skipped inner ``__exit__`` calls, everything above ``handler`` is popped
+    too.  Shared by ``Messenger.__exit__`` and ``plate.__exit__``.  Draining
+    the stack ends the current handler episode."""
+    global _EPISODE
+    if _STACK and _STACK[-1] is handler:
+        _STACK.pop()
+    elif handler in _STACK:
+        while _STACK and _STACK[-1] is not handler:
+            _STACK.pop()
+        if _STACK:
+            _STACK.pop()
+    if not _STACK:
+        _EPISODE += 1
+
+
 def apply_stack(msg: dict) -> dict:
     """Thread ``msg`` through the handler stack.
 
@@ -54,10 +105,6 @@ def apply_stack(msg: dict) -> dict:
     return msg
 
 
-def _masked_observe_shape(fn, obs):
-    return obs
-
-
 def sample(
     name: str,
     fn,
@@ -71,6 +118,11 @@ def sample(
     With ``obs`` the site is observed and contributes ``fn.log_prob(obs)`` to
     the joint density.  Without an enclosing :class:`~repro.core.handlers.seed`
     handler an explicit ``rng_key`` must be supplied (JAX functional PRNG).
+
+    ``infer`` attaches per-site inference configuration (a free-form dict,
+    e.g. ``{"is_auxiliary": True}``); the
+    :class:`~repro.core.handlers.infer_config` handler can rewrite it
+    stack-wide.
     """
     if not _STACK:
         if obs is not None:
@@ -93,7 +145,9 @@ def sample(
         "scale": None,
         "mask": None,
         "cond_indep_stack": [],
-        "infer": infer or {},
+        # copy: handlers (infer_config) merge into this dict, and the
+        # caller's dict may be shared across sites / traces
+        "infer": dict(infer) if infer else {},
     }
     return apply_stack(msg)["value"]
 
@@ -106,6 +160,11 @@ def param(name: str, init_value=None, *, shape=None, init_fn=None, dtype=jnp.flo
     taking ``(rng_key, shape, dtype)``) for lazy initialization under a
     ``seed`` handler.  ``sharding`` carries a :class:`PartitionSpec` hint the
     distributed runtime uses to place the parameter on the mesh.
+
+    Param sites are *not* scored by :func:`~repro.core.infer.util.log_density`
+    (no ``log_prob``); ``scale``/``mask`` on them are inert.  They are
+    materialized by ``substitute`` (from a param map) or ``seed`` (fresh
+    initialization) and collected by :meth:`SVI.init`.
     """
     if not _STACK:
         return init_value
@@ -137,7 +196,13 @@ def param(name: str, init_value=None, *, shape=None, init_fn=None, dtype=jnp.flo
 
 
 def deterministic(name: str, value):
-    """Record a deterministic value in the trace (for downstream analysis)."""
+    """Record a deterministic value in the trace (for downstream analysis).
+
+    Deterministic sites never contribute to the joint density; handlers that
+    rewrite densities (``scale``/``mask``/``plate``) ignore them, while
+    ``trace`` records them and :class:`~repro.core.infer.util.Predictive`
+    returns them alongside predictive draws.
+    """
     if not _STACK:
         return value
     msg = {
@@ -156,72 +221,255 @@ def deterministic(name: str, value):
     return apply_stack(msg)["value"]
 
 
+def _subsample_indices(size, subsample_size, rng_key=None):
+    """Minibatch index vector for a plate: a random size-``subsample_size``
+    subset of ``range(size)`` without replacement (the first block of a random
+    permutation), or ``arange`` when no subsampling / no key is available."""
+    if subsample_size >= size:
+        return jnp.arange(size)
+    if rng_key is None:
+        warnings.warn(
+            f"subsampled plate (size={size}, subsample_size={subsample_size}) "
+            "traced without an rng key: falling back to deterministic "
+            "arange indices. Wrap the model in a `seed` handler for genuine "
+            "random-minibatch subsampling.",
+            stacklevel=2,
+        )
+        return jnp.arange(subsample_size)
+    return jax.random.permutation(rng_key, size)[:subsample_size]
+
+
+def subsample(data, event_dim: int = 0):
+    """Select the enclosing plates' minibatch rows of ``data``.
+
+    For each active :class:`plate` frame whose dimension (counted from the
+    right of the *batch* shape, i.e. offset left by ``event_dim``) has full
+    length ``plate.size``, the plate's current subsample indices are applied
+    with ``jnp.take`` along that axis.  Arrays already minibatch-sized pass
+    through unchanged, so the same model code runs full-batch and subsampled.
+
+    ``event_dim`` is the number of trailing dimensions of ``data`` that are
+    per-datapoint event dims (e.g. feature columns) rather than batch dims.
+    Outside any handler stack, or outside any plate, ``data`` is returned
+    unchanged.
+    """
+    if not _STACK:
+        return data
+    msg = {
+        "type": "subsample",
+        "name": None,
+        "fn": lambda *a, **kw: data,
+        "args": (),
+        "kwargs": {"event_dim": event_dim},
+        "value": data,
+        "is_observed": False,
+        "scale": None,
+        "mask": None,
+        "cond_indep_stack": [],
+        "infer": {},
+    }
+    return apply_stack(msg)["value"]
+
+
 class plate:
     """Conditional-independence context manager.
 
     Samples drawn inside are batched along ``dim`` (negative, counted from the
-    right of the batch shape) and, when ``subsample_size`` is given, log
-    densities are rescaled by ``size / subsample_size`` (for subsampled data /
-    stochastic VI on minibatches).
+    right of the batch shape).  With ``subsample_size < size`` the plate draws
+    a *random* minibatch of indices (returned by ``__enter__``) and rescales
+    the log density of every enclosed site by ``size / subsample_size``, so
+    SVI on minibatches is genuinely stochastic and unbiased.
+
+    Handler-protocol effects (all in ``process_message``):
+
+    - ``sample`` sites: append a :class:`CondIndepStackFrame`, expand the
+      distribution's batch shape along ``dim`` (validating that any existing
+      extent there is broadcastable, i.e. 1 or ``subsample_size``), and
+      accumulate the ``size / subsample_size`` density scale.
+    - ``subsample`` sites: ``jnp.take`` the plate's minibatch indices along
+      the matching data axis.
+
+    Index randomness flows through the message stack: on first entry a
+    subsampled plate emits a ``"plate"``-typed message, so ``seed`` supplies
+    the PRNG key, ``trace`` records the drawn indices, and ``replay`` /
+    ``substitute`` can pin them (replaying a subsampled trace reproduces the
+    same minibatch).  Indices are cached on the plate object for the duration
+    of one model execution (one handler episode), making ``with``-re-entry
+    consistent: every entry of one plate object sees the same minibatch.  A
+    fresh execution — including a ``jit`` retrace of a plate object
+    constructed outside the model function — invalidates the cache and
+    redraws, so stale tracers never leak across traces.
+
+    ``dim=None`` allocates the outermost free dimension **per entry** without
+    mutating the object, so a plate reused at different nesting depths never
+    silently shifts dims.
     """
 
     def __init__(self, name: str, size: int, subsample_size: Optional[int] = None,
                  dim: Optional[int] = None):
         if size <= 0:
             raise ValueError(f"plate '{name}' needs positive size, got {size}")
+        if subsample_size is not None and not 0 < subsample_size <= size:
+            raise ValueError(
+                f"plate '{name}' subsample_size must be in (0, {size}], got "
+                f"{subsample_size}")
         self.name = name
         self.size = size
         self.subsample_size = size if subsample_size is None else subsample_size
         if dim is not None and dim >= 0:
             raise ValueError("plate dim must be negative (counted from the right)")
-        self.dim = dim
-        self._guard = None
+        self.dim = dim            # user-specified; never mutated
+        self._indices = None      # cached minibatch indices (lazy)
+        self._cache_token = None  # handler episode the cache belongs to
+        self._site_name = name    # post-stack name (scope may prefix it)
+        self._frame = None        # the active entry's frame (None when closed)
 
-    def _current_frames(self):
-        return [f for h in _STACK if isinstance(h, plate) and h._guard is not None
-                for f in [h._frame]]
+    # -- indices --------------------------------------------------------------
+    @staticmethod
+    def _episode_token():
+        """The current handler episode (see ``_EPISODE``).  A token mismatch
+        means the cached indices belong to a previous model execution —
+        reusing them would freeze the minibatch (and leak stale tracers
+        across ``jit`` traces) for a plate object constructed outside the
+        model function.  Within one execution the episode is stable, so
+        ``with``-re-entries share one minibatch."""
+        return _EPISODE
+
+    def _get_indices(self):
+        if self._indices is not None \
+                and self._cache_token != self._episode_token():
+            self._indices = None  # new trace episode: redraw
+            self._site_name = self.name
+        if self._indices is None:
+            self._cache_token = self._episode_token()
+            if self.subsample_size < self.size and _STACK:
+                # route through the handler stack: seed provides the rng key,
+                # trace records the draw, replay/substitute can override it
+                msg = {
+                    "type": "plate",
+                    "name": self.name,
+                    "fn": partial(_subsample_indices, self.size,
+                                  self.subsample_size),
+                    "args": (),
+                    "kwargs": {"rng_key": None},
+                    "value": None,
+                    "is_observed": False,
+                    "scale": None,
+                    "mask": None,
+                    "cond_indep_stack": [],
+                    "infer": {},
+                }
+                out = apply_stack(msg)
+                indices = out["value"]
+                # handlers may rewrite the site name (scope); frames must
+                # carry the name the trace records, or consumers matching
+                # frames to recorded plate sites (autoguides) miss them
+                self._site_name = out["name"]
+                # a handler (substitute/replay) may have injected the indices;
+                # a wrong-length vector would silently disagree with the
+                # subsample_size the enclosed sites are expanded and scaled to
+                if jnp.shape(indices) != (self.subsample_size,):
+                    raise ValueError(
+                        f"plate '{self.name}': injected subsample indices "
+                        f"have shape {jnp.shape(indices)}, expected "
+                        f"({self.subsample_size},) — was this trace recorded "
+                        "with a different subsample_size?")
+                # range-check concrete indices (jnp.take would silently clamp
+                # out-of-range entries, biasing the minibatch); traced
+                # indices can't be inspected, so only concrete values check
+                try:
+                    concrete = np.asarray(indices)
+                except Exception:
+                    concrete = None
+                if concrete is not None and concrete.size and (
+                        concrete.min() < 0 or concrete.max() >= self.size):
+                    raise ValueError(
+                        f"plate '{self.name}': injected subsample indices "
+                        f"fall outside [0, {self.size}) — was this trace "
+                        "recorded against a larger dataset?")
+                self._indices = indices
+            else:
+                self._indices = _subsample_indices(self.size,
+                                                   self.subsample_size)
+        return self._indices
+
+    @staticmethod
+    def _occupied_dims():
+        return {h._frame.dim for h in _STACK
+                if isinstance(h, plate) and h._frame is not None}
 
     def __enter__(self):
-        occupied = {f.dim for f in self._current_frames()}
-        if self.dim is None:
+        if any(h is self for h in _STACK):
+            raise ValueError(
+                f"plate '{self.name}' is already active and cannot be "
+                "re-entered while open (construct a second plate instead)")
+        occupied = self._occupied_dims()
+        dim = self.dim
+        if dim is None:
             dim = -1
             while dim in occupied:
                 dim -= 1
-            self.dim = dim
-        elif self.dim in occupied:
-            raise ValueError(f"plate dim {self.dim} already occupied")
-        self._frame = CondIndepStackFrame(self.name, self.dim, self.subsample_size)
-        self._guard = True
+        elif dim in occupied:
+            raise ValueError(
+                f"plate '{self.name}': dim {dim} already occupied by an "
+                "enclosing plate")
+        indices = self._get_indices()  # message runs before we join the stack
+        self._frame = CondIndepStackFrame(self._site_name, dim,
+                                          self.subsample_size)
         _STACK.append(self)
-        return jnp.arange(self.subsample_size)
+        return indices
 
     def __exit__(self, *exc):
-        _STACK.pop()
-        self._guard = None
+        pop_from_stack(self)
+        self._frame = None
         return False
 
     # --- handler protocol -------------------------------------------------
     def process_message(self, msg: dict) -> None:
-        if msg["type"] not in ("sample",):
-            return
-        msg["cond_indep_stack"].append(self._frame)
-        if msg["value"] is None:
-            # expand the distribution batch shape along our dim
-            fn = msg["fn"]
-            batch_shape = getattr(fn, "batch_shape", ())
-            target = self._expanded_shape(batch_shape)
-            if tuple(target) != tuple(batch_shape):
-                msg["fn"] = fn.expand(tuple(target))
-        if self.size != self.subsample_size:
-            scale = self.size / self.subsample_size
-            msg["scale"] = scale if msg["scale"] is None else msg["scale"] * scale
+        frame = self._frame
+        if msg["type"] == "sample":
+            msg["cond_indep_stack"].append(frame)
+            if msg["value"] is None:
+                fn = msg["fn"]
+                batch_shape = tuple(getattr(fn, "batch_shape", ()))
+                target = self._expanded_shape(msg["name"], batch_shape,
+                                              frame.dim)
+                if tuple(target) != batch_shape:
+                    msg["fn"] = fn.expand(tuple(target))
+            if self.size != self.subsample_size:
+                scale = self.size / self.subsample_size
+                msg["scale"] = (scale if msg["scale"] is None
+                                else msg["scale"] * scale)
+        elif msg["type"] == "subsample":
+            axis = frame.dim - msg["kwargs"].get("event_dim", 0)
+            shape = jnp.shape(msg["value"])
+            if len(shape) < -axis:
+                return  # data doesn't span this plate's dim: nothing to take
+            if shape[axis] == self.size:
+                if self.subsample_size != self.size:
+                    msg["value"] = jnp.take(msg["value"], self._get_indices(),
+                                            axis=axis)
+            elif shape[axis] not in (1, self.subsample_size):
+                # extent 1 broadcasts (mirrors the sample-site rule in
+                # _expanded_shape); anything else is a genuine mismatch
+                raise ValueError(
+                    f"subsample inside plate '{self.name}': axis {axis} of "
+                    f"data shape {shape} is {shape[axis]}, expected the full "
+                    f"size {self.size}, the subsample size "
+                    f"{self.subsample_size}, or a broadcastable 1")
 
     def postprocess_message(self, msg: dict) -> None:
         pass
 
-    def _expanded_shape(self, batch_shape):
-        ndim = max(len(batch_shape), -self.dim)
+    def _expanded_shape(self, site_name, batch_shape, dim):
+        ndim = max(len(batch_shape), -dim)
         shape = [1] * ndim
         shape[len(shape) - len(batch_shape):] = list(batch_shape)
-        shape[self.dim] = self.subsample_size
+        if shape[dim] not in (1, self.subsample_size):
+            raise ValueError(
+                f"sample site '{site_name}': batch shape {tuple(batch_shape)} "
+                f"has extent {shape[dim]} at dim {dim} of plate "
+                f"'{self.name}', which broadcasts with neither 1 nor the "
+                f"plate's subsample size {self.subsample_size}")
+        shape[dim] = self.subsample_size
         return shape

@@ -1,0 +1,150 @@
+"""Reparameterizer library for the :class:`~repro.core.handlers.reparam`
+handler.
+
+A *reparameterizer* rewrites one latent sample site into auxiliary sites plus
+deterministic transforms, leaving the joint density invariant but changing the
+geometry the sampler sees.  The canonical case is the non-centered
+parameterization of hierarchical models: ``theta ~ Normal(mu, tau)`` inside a
+funnel becomes ``theta_decentered ~ Normal(0, 1)`` with
+``theta = mu + tau * theta_decentered``, which NUTS traverses without the
+step-size pathologies of the centered form (see ``examples/eight_schools.py``).
+
+A strategy is called by the handler as ``new_fn, value = strategy(name, fn,
+obs)`` where ``fn`` is the site's (possibly plate-expanded) distribution and
+``obs`` is the observed value or None.  Return ``(None, value)`` to turn the
+site into a deterministic function of the auxiliaries the strategy sampled,
+or ``(new_fn, None)`` to merely swap the site's distribution.  Auxiliary
+sample statements issued inside a strategy re-enter the handler stack
+normally: they get seeded, traced, substituted, and plate-expanded exactly
+like hand-written sites, which is what makes reparameterized models work
+unchanged under ``Predictive``, SVI, and MCMC.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import primitives
+from .dist.distribution import (
+    Distribution,
+    ExpandedDistribution,
+    Independent,
+    TransformedDistribution,
+)
+
+__all__ = ["Reparam", "TransformReparam", "LocScaleReparam"]
+
+
+def _unwrap(fn):
+    """Peel ``Independent`` / ``ExpandedDistribution`` wrappers (added by
+    ``.to_event`` and plate expansion), remembering the full draw shape and
+    event dim so :func:`_wrap` can rebuild an equivalently-shaped wrapper
+    around a replacement base distribution."""
+    shape = fn.shape()
+    event_dim = fn.event_dim
+    while isinstance(fn, (Independent, ExpandedDistribution)):
+        fn = fn.base_dist
+    return fn, shape, event_dim
+
+
+def _wrap(fn, shape, event_dim):
+    """Inverse of :func:`_unwrap`: expand ``fn`` so a single draw has shape
+    ``shape`` and reinterpret trailing dims up to ``event_dim``."""
+    batch_shape = tuple(shape[:len(shape) - fn.event_dim])
+    if batch_shape != tuple(fn.batch_shape):
+        fn = fn.expand(batch_shape)
+    extra = event_dim - fn.event_dim
+    if extra > 0:
+        fn = fn.to_event(extra)
+    return fn
+
+
+class Reparam:
+    """Base class: a callable ``(name, fn, obs) -> (new_fn, value)``."""
+
+    def __call__(self, name: str, fn: Distribution,
+                 obs) -> Tuple[Optional[Distribution], Optional[jnp.ndarray]]:
+        raise NotImplementedError
+
+
+class TransformReparam(Reparam):
+    """Split a :class:`~repro.core.dist.TransformedDistribution` site into a
+    sample of its base distribution (at ``f"{name}_base"``) plus the
+    deterministic transform chain.
+
+    After reparameterization the latent the sampler sees is the *base* draw,
+    so e.g. ``TransformedDistribution(Normal(0, 1), AffineTransform(mu, tau))``
+    becomes an isotropic latent regardless of how pathological ``(mu, tau)``
+    make the transformed geometry.
+    """
+
+    def __call__(self, name, fn, obs):
+        if obs is not None:
+            raise ValueError(
+                f"TransformReparam cannot reparameterize observed site '{name}'")
+        fn, shape, event_dim = _unwrap(fn)
+        if not isinstance(fn, TransformedDistribution):
+            raise ValueError(
+                f"TransformReparam expects a TransformedDistribution at site "
+                f"'{name}', got {type(fn).__name__}")
+        base = _wrap(fn.base_dist, shape, event_dim)
+        x = primitives.sample(f"{name}_base", base,
+                              infer={"reparam_auxiliary": True})
+        for t in fn.transforms:
+            x = t(x)
+        return None, x
+
+
+class LocScaleReparam(Reparam):
+    """Interpolated centered(1.0) <-> non-centered(0.0) reparameterization of
+    a loc-scale family site (Normal, Cauchy, StudentT, ...).
+
+    For centering weight ``c`` the auxiliary site ``f"{name}_decentered"``
+    draws from ``type(fn)(loc * c, scale ** c, **shape_params)`` and the
+    original site becomes the deterministic
+
+        ``value = loc + scale ** (1 - c) * (decentered - c * loc)``
+
+    so ``c = 1`` is a no-op (fully centered) and ``c = 0`` (the default)
+    yields the classic non-centered form ``loc + scale * eps`` with
+    ``eps ~ type(fn)(0, 1)``.  With ``centered=None`` the weight becomes a
+    learnable ``param`` site (init 0.5) for use under SVI; note the weight is
+    unconstrained there, so pair it with an optimizer step size that keeps it
+    near [0, 1].
+
+    ``shape_params`` names non-loc/scale parameters to forward verbatim
+    (e.g. ``("df",)`` for StudentT).
+    """
+
+    def __init__(self, centered: Optional[float] = 0.0, shape_params=()):
+        if centered is not None and not (0.0 <= float(centered) <= 1.0):
+            raise ValueError(f"centered must be in [0, 1], got {centered}")
+        self.centered = centered
+        self.shape_params = tuple(shape_params)
+
+    def __call__(self, name, fn, obs):
+        if obs is not None:
+            raise ValueError(
+                f"LocScaleReparam cannot reparameterize observed site '{name}'")
+        centered = self.centered
+        if centered is not None and float(centered) == 1.0:
+            return fn, None
+        fn, shape, event_dim = _unwrap(fn)
+        if not (hasattr(fn, "loc") and hasattr(fn, "scale")):
+            raise ValueError(
+                f"LocScaleReparam expects a loc-scale distribution at site "
+                f"'{name}', got {type(fn).__name__}")
+        loc, scale = fn.loc, fn.scale
+        if centered is None:
+            init = jnp.full(
+                jnp.broadcast_shapes(jnp.shape(loc), jnp.shape(scale)), 0.5)
+            centered = primitives.param(f"{name}_centered", init)
+        params = {k: getattr(fn, k) for k in self.shape_params}
+        params["loc"] = loc * centered
+        params["scale"] = scale ** centered
+        decentered_fn = _wrap(type(fn)(**params), shape, event_dim)
+        decentered = primitives.sample(f"{name}_decentered", decentered_fn,
+                                       infer={"reparam_auxiliary": True})
+        value = loc + scale ** (1 - centered) * (decentered - centered * loc)
+        return None, value

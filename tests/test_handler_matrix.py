@@ -1,0 +1,510 @@
+"""Handler-composition matrix: plates (nested/auto-dim/re-entrant/subsampled)
+× {mask, scale, condition, replay, scope, infer_config} × {jit, vmap, grad}.
+
+These are the interaction regressions for docs/handlers.md's composition
+matrix — each test pins one cell of it.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.handlers import (block, condition, infer_config, mask, replay,
+                                 scale, scope, seed, substitute, trace)
+from repro.core.infer import log_density
+
+# ---------------------------------------------------------------------------
+# plates: dims, nesting, re-entrancy, validation
+# ---------------------------------------------------------------------------
+
+
+def test_nested_plates_auto_dims():
+    def m():
+        with pc.plate("outer", 3):
+            with pc.plate("inner", 2):
+                return pc.sample("x", dist.Normal(0.0, 1.0))
+
+    x = seed(m, random.PRNGKey(0))()
+    assert x.shape == (2, 3)  # outer claims -1 first, inner gets -2
+
+
+def test_nested_plates_explicit_dims():
+    def m():
+        with pc.plate("outer", 3, dim=-2):
+            with pc.plate("inner", 2):  # auto: -1 is free
+                x = pc.sample("x", dist.Normal(0.0, 1.0))
+        with pc.plate("solo", 4):       # auto: back to -1
+            y = pc.sample("y", dist.Normal(0.0, 1.0))
+        return x, y
+
+    x, y = seed(m, random.PRNGKey(0))()
+    assert x.shape == (3, 2)
+    assert y.shape == (4,)
+
+
+def test_explicit_dim_collision_raises():
+    def m():
+        with pc.plate("a", 3, dim=-1):
+            with pc.plate("b", 2, dim=-1):
+                pc.sample("x", dist.Normal(0.0, 1.0))
+
+    with pytest.raises(ValueError, match="already occupied"):
+        seed(m, random.PRNGKey(0))()
+
+
+def test_plate_reentrancy_no_dim_shift():
+    """Regression: a plate reused at different nesting depths must not keep
+    the deeper auto-assigned dim (the old __enter__ mutated self.dim)."""
+    p = pc.plate("A", 5)
+
+    def m():
+        with pc.plate("B", 3):
+            with p:  # auto-dim resolves to -2 here
+                a = pc.sample("a", dist.Normal(0.0, 1.0))
+        with p:      # standalone: must resolve to -1 again
+            b = pc.sample("b", dist.Normal(0.0, 1.0))
+        return a, b
+
+    a, b = seed(m, random.PRNGKey(0))()
+    assert a.shape == (5, 3)
+    assert b.shape == (5,)
+    assert p.dim is None  # user-specified dim is never mutated
+
+
+def test_plate_nested_self_entry_raises():
+    p = pc.plate("A", 3)
+
+    def m():
+        with p, p:
+            pc.sample("x", dist.Normal(0.0, 1.0))
+
+    with pytest.raises(ValueError, match="re-entered"):
+        seed(m, random.PRNGKey(0))()
+
+
+def test_plate_broadcast_validation():
+    def m():
+        with pc.plate("N", 4):
+            pc.sample("x", dist.Normal(jnp.zeros(3), 1.0))
+
+    with pytest.raises(ValueError, match="broadcasts with neither"):
+        seed(m, random.PRNGKey(0))()
+
+
+def test_plate_size_one_batch_broadcasts():
+    def m():
+        with pc.plate("N", 4):
+            return pc.sample("x", dist.Normal(jnp.zeros((1,)), 1.0))
+
+    assert seed(m, random.PRNGKey(0))().shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# subsampling: randomness, replay, subsample primitive, ELBO scaling
+# ---------------------------------------------------------------------------
+
+
+def _sub_model(x, y=None):
+    w = pc.sample("w", dist.Normal(0.0, 1.0))
+    with pc.plate("N", 10, subsample_size=4) as idx:
+        xb = pc.subsample(x, event_dim=0)
+        yb = pc.subsample(y, event_dim=0) if y is not None else None
+        pc.sample("obs", dist.Normal(w * xb, 1.0), obs=yb)
+    return idx
+
+
+X = jnp.arange(10.0)
+Y = 2.0 * X
+
+
+def test_subsample_indices_random_and_seeded():
+    i0 = seed(_sub_model, random.PRNGKey(0))(X, Y)
+    i0b = seed(_sub_model, random.PRNGKey(0))(X, Y)
+    i1 = seed(_sub_model, random.PRNGKey(1))(X, Y)
+    assert i0.shape == (4,)
+    assert jnp.array_equal(i0, i0b)          # same seed, same minibatch
+    assert not jnp.array_equal(i0, i1)       # different seed, different one
+    assert len(set(i0.tolist())) == 4        # without replacement
+
+
+def test_subsample_primitive_selects_matching_rows():
+    tr = trace(seed(_sub_model, random.PRNGKey(0))).get_trace(X, Y)
+    idx = tr["N"]["value"]
+    assert jnp.array_equal(tr["obs"]["value"], Y[idx])
+    assert tr["obs"]["scale"] == pytest.approx(2.5)  # 10 / 4
+
+
+def test_subsample_passthrough_for_minibatch_sized_data():
+    def m(xb):
+        with pc.plate("N", 10, subsample_size=4):
+            return pc.subsample(xb, event_dim=0)
+
+    out = seed(m, random.PRNGKey(0))(jnp.arange(4.0))
+    assert jnp.array_equal(out, jnp.arange(4.0))  # already minibatch-sized
+
+
+def test_subsample_event_dim_offsets_axis():
+    def m(x2d):
+        with pc.plate("N", 10, subsample_size=4) as idx:
+            return idx, pc.subsample(x2d, event_dim=1)
+
+    x2d = jnp.arange(30.0).reshape(10, 3)
+    idx, out = seed(m, random.PRNGKey(0))(x2d)
+    assert out.shape == (4, 3)
+    assert jnp.array_equal(out, x2d[idx])
+
+
+def test_unseeded_subsample_warns_and_falls_back():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        lp, tr = log_density(_sub_model, (X,), {"y": Y}, {"w": jnp.array(2.0)})
+    assert any("subsampled plate" in str(x.message) for x in w)
+    assert jnp.array_equal(tr["N"]["value"], jnp.arange(4))
+
+
+def test_replay_of_subsampled_trace():
+    """Replay pins BOTH the latents and the minibatch indices, so the replayed
+    execution reproduces the recorded log density exactly."""
+    guide_tr = trace(seed(_sub_model, random.PRNGKey(0))).get_trace(X, Y)
+    replayed = replay(seed(_sub_model, random.PRNGKey(99)), guide_tr)
+    tr = trace(replayed).get_trace(X, Y)
+    assert jnp.array_equal(tr["N"]["value"], guide_tr["N"]["value"])
+    assert jnp.allclose(tr["w"]["value"], guide_tr["w"]["value"])
+    assert jnp.array_equal(tr["obs"]["value"], guide_tr["obs"]["value"])
+
+
+def test_substitute_pins_plate_indices():
+    forced = jnp.array([9, 8, 7, 6])
+    tr = trace(substitute(seed(_sub_model, random.PRNGKey(0)),
+                          data={"N": forced})).get_trace(X, Y)
+    assert jnp.array_equal(tr["N"]["value"], forced)
+    assert jnp.array_equal(tr["obs"]["value"], Y[forced])
+
+
+def test_subsampled_log_density_is_unbiased():
+    """E_minibatch[scaled obs term] == full-data obs term."""
+    w = jnp.array(2.0)
+    full_obs = dist.Normal(w * X, 1.0).log_prob(Y).sum()
+
+    def one(key):
+        lp, tr = log_density(seed(_sub_model, key), (X,), {"y": Y}, {"w": w})
+        prior = dist.Normal(0.0, 1.0).log_prob(w)
+        return lp - prior
+
+    keys = random.split(random.PRNGKey(0), 2000)
+    est = jax.vmap(one)(keys)
+    assert jnp.allclose(est.mean(), full_obs, rtol=0.02)
+
+
+def test_subsampled_density_composes_with_jit_vmap_grad():
+    def f(key, w):
+        return log_density(seed(substitute(_sub_model, {"w": w}), key),
+                           (X, Y), {}, {})[0]
+
+    keys = random.split(random.PRNGKey(0), 3)
+    g = jax.jit(jax.vmap(jax.grad(f, argnums=1)))(keys, jnp.arange(3.0))
+    assert g.shape == (3,)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# mask ∘ scale ∘ condition ordering
+# ---------------------------------------------------------------------------
+
+
+def _obs_site():
+    pc.sample("z", dist.Normal(0.0, 1.0).expand((4,)),
+              obs=jnp.zeros(4))
+
+
+def test_mask_scale_condition_ordering():
+    """mask zeroes BEFORE scale multiplies, independent of nesting order, and
+    condition'd sites respect both."""
+    base = dist.Normal(0.0, 1.0).log_prob(0.0)
+    keep = jnp.array([True, True, False, False])
+
+    def m_ms():
+        with mask(mask=keep):
+            with scale(scale=3.0):
+                _obs_site()
+
+    def m_sm():
+        with scale(scale=3.0):
+            with mask(mask=keep):
+                _obs_site()
+
+    lp_ms, _ = log_density(m_ms, (), {}, {})
+    lp_sm, _ = log_density(m_sm, (), {}, {})
+    assert jnp.allclose(lp_ms, lp_sm)
+    assert jnp.allclose(lp_ms, 3.0 * 2 * base)
+
+    def m_cond():
+        with scale(scale=3.0):
+            with mask(mask=keep):
+                pc.sample("z", dist.Normal(0.0, 1.0).expand((4,)))
+
+    lp_c, tr = log_density(condition(m_cond, {"z": jnp.zeros(4)}), (), {}, {})
+    assert tr["z"]["is_observed"]
+    assert jnp.allclose(lp_c, lp_ms)
+
+
+def test_nested_scales_and_subsampled_plate_multiply():
+    def m():
+        with scale(scale=2.0):
+            with pc.plate("N", 10, subsample_size=5):
+                pc.sample("z", dist.Normal(0.0, 1.0), obs=jnp.zeros(5))
+
+    lp, _ = log_density(seed(m, random.PRNGKey(0)), (), {}, {})
+    assert jnp.allclose(lp, 2.0 * 2.0 * 5 * dist.Normal(0.0, 1.0).log_prob(0.0))
+
+
+# ---------------------------------------------------------------------------
+# scope / infer_config
+# ---------------------------------------------------------------------------
+
+
+def _unit():
+    w = pc.sample("w", dist.Normal(0.0, 1.0))
+    pc.deterministic("wsq", w ** 2)
+    with pc.plate("N", 6, subsample_size=3):
+        pc.sample("x", dist.Normal(w, 1.0))
+    return w
+
+
+def test_scope_prefixes_all_named_sites():
+    tr = trace(seed(scope(_unit, prefix="left"),
+                    random.PRNGKey(0))).get_trace()
+    assert set(tr) == {"left/w", "left/wsq", "left/N", "left/x"}
+
+
+def test_scope_nests_and_avoids_collisions():
+    def two_units():
+        a = scope(_unit, prefix="a")()
+        b = scope(_unit, prefix="b")()
+        return a, b
+
+    tr = trace(seed(two_units, random.PRNGKey(0))).get_trace()
+    assert "a/w" in tr and "b/w" in tr
+    nested = trace(seed(scope(scope(_unit, prefix="in"), prefix="out"),
+                        random.PRNGKey(0))).get_trace()
+    assert "out/in/w" in nested
+
+
+def test_scope_composes_with_jit_vmap():
+    def f(key):
+        tr = trace(seed(scope(_unit, prefix="s"), key)).get_trace()
+        return tr["s/x"]["value"]
+
+    out = jax.jit(jax.vmap(f))(random.split(random.PRNGKey(0), 4))
+    assert out.shape == (4, 3)
+
+
+def test_infer_config_updates_matching_sites():
+    cfg = lambda msg: ({"enumerate": "parallel"}
+                       if msg["type"] == "sample"
+                       and not msg["is_observed"] else {})
+    tr = trace(seed(infer_config(_unit, config_fn=cfg),
+                    random.PRNGKey(0))).get_trace()
+    assert tr["w"]["infer"] == {"enumerate": "parallel"}
+    assert tr["x"]["infer"] == {"enumerate": "parallel"}
+    assert tr["wsq"]["infer"] == {}
+
+
+def test_infer_config_merges_with_site_infer():
+    def m():
+        pc.sample("z", dist.Normal(0.0, 1.0), infer={"site_key": 1})
+
+    tr = trace(seed(infer_config(m, config_fn=lambda _: {"handler_key": 2}),
+                    random.PRNGKey(0))).get_trace()
+    assert tr["z"]["infer"] == {"site_key": 1, "handler_key": 2}
+
+
+def test_block_hides_subsampled_plate_from_outer_trace():
+    def m():
+        with pc.plate("N", 10, subsample_size=4):
+            pc.sample("x", dist.Normal(0.0, 1.0))
+
+    tr = trace(block(seed(m, random.PRNGKey(0)), hide=["N"])).get_trace()
+    assert "N" not in tr and "x" in tr
+
+
+def test_subsample_skips_plates_the_data_does_not_span():
+    """Regression: an outer plate whose dim exceeds the data's rank must pass
+    the array through untouched, not raise."""
+    def m(x):
+        with pc.plate("groups", 3, dim=-2):
+            with pc.plate("N", 10, subsample_size=4, dim=-1) as idx:
+                return idx, pc.subsample(x, event_dim=0)
+
+    x = jnp.arange(10.0)
+    idx, xb = seed(m, random.PRNGKey(0))(x)
+    assert xb.shape == (4,)
+    assert jnp.array_equal(xb, x[idx])
+
+
+def test_infer_config_does_not_mutate_caller_dict():
+    """Regression: site `infer` dicts are copied per message, so a marking
+    handler can't leak configuration into the caller's dict (and thereby
+    into later traces run without the handler)."""
+    shared = {"tag": 1}
+
+    def m():
+        pc.sample("a", dist.Normal(0.0, 1.0), infer=shared)
+        pc.sample("b", dist.Normal(0.0, 1.0), infer=shared)
+
+    marked = infer_config(m, config_fn=lambda msg: {"aux_" + msg["name"]: True})
+    tr = trace(seed(marked, random.PRNGKey(0))).get_trace()
+    assert tr["a"]["infer"] == {"tag": 1, "aux_a": True}
+    assert tr["b"]["infer"] == {"tag": 1, "aux_b": True}
+    assert shared == {"tag": 1}
+    plain = trace(seed(m, random.PRNGKey(0))).get_trace()
+    assert plain["a"]["infer"] == {"tag": 1}
+
+
+def test_substitute_wrong_length_plate_indices_raises():
+    """Regression: pinned indices must match subsample_size, else the sites'
+    expansion and density scale would silently disagree with the data."""
+    with pytest.raises(ValueError, match="injected subsample indices"):
+        trace(substitute(seed(_sub_model, random.PRNGKey(0)),
+                         data={"N": jnp.array([0, 1])})).get_trace(X, Y)
+
+
+def test_replay_observed_recording_against_latent_site_raises():
+    """Regression: a site recorded as observed replayed into a model where it
+    is latent must fail loudly, not silently resample."""
+    def m(y=None):
+        w = pc.sample("w", dist.Normal(0.0, 1.0))
+        pc.sample("y", dist.Normal(w, 1.0), obs=y)
+
+    recorded = trace(seed(condition(m, {"y": jnp.array(2.0)}),
+                          random.PRNGKey(0))).get_trace()
+    with pytest.raises(RuntimeError, match="recorded as observed"):
+        seed(replay(m, recorded), random.PRNGKey(1))()
+
+
+def test_condition_on_reparamed_site_raises():
+    """Regression: condition outside reparam used to drop the data silently
+    (the site is deterministic by the time the outer handler sees it)."""
+    from repro.core.handlers import reparam
+    from repro.core.reparam import LocScaleReparam
+
+    def m():
+        mu = pc.sample("mu", dist.Normal(0.0, 1.0))
+        pc.sample("theta", dist.Normal(mu, 1.0))
+
+    wrapped = reparam(m, config={"theta": LocScaleReparam(0.0)})
+    with pytest.raises(ValueError, match="deterministic site 'theta'"):
+        seed(condition(wrapped, {"theta": jnp.array(3.0)}),
+             random.PRNGKey(0))()
+    with pytest.raises(ValueError, match="deterministic site 'theta'"):
+        seed(substitute(wrapped, {"theta": jnp.array(3.0)}),
+             random.PRNGKey(0))()
+
+
+def test_do_on_reparamed_site_raises():
+    """Regression: `do` outside `reparam` must fail loudly like condition/
+    substitute, not drop the intervention."""
+    from repro.core.handlers import do, reparam
+    from repro.core.reparam import LocScaleReparam
+
+    def m():
+        mu = pc.sample("mu", dist.Normal(0.0, 1.0))
+        pc.sample("theta", dist.Normal(mu, 1.0))
+
+    wrapped = reparam(m, config={"theta": LocScaleReparam(0.0)})
+    with pytest.raises(ValueError, match="deterministic site 'theta'"):
+        seed(do(wrapped, {"theta": jnp.array(100.0)}), random.PRNGKey(0))()
+
+
+def test_out_of_range_injected_plate_indices_raise():
+    """Regression: jnp.take clamps out-of-range indices silently; concrete
+    injected indices are range-checked instead."""
+    with pytest.raises(ValueError, match="outside"):
+        trace(substitute(seed(_sub_model, random.PRNGKey(0)),
+                         data={"N": jnp.array([0, 1, 2, 9999])})
+              ).get_trace(X, Y)
+
+
+def test_subsample_broadcast_extent_one_axis_passes_through():
+    """Regression: extent-1 data axes at a plate dim broadcast (mirroring the
+    sample-site rule), they are not a size mismatch."""
+    def m(x):
+        with pc.plate("outer", 10, subsample_size=5, dim=-2):
+            with pc.plate("inner", 20, subsample_size=4, dim=-1):
+                return pc.subsample(x, event_dim=0)
+
+    x = jnp.arange(10.0)[:, None]          # (10, 1): spans outer only
+    out = seed(m, random.PRNGKey(0))(x)
+    assert out.shape == (5, 1)
+
+
+def test_substitute_fn_on_reparamed_site_raises():
+    """Regression: the substitute_fn path honors the deterministic-site guard
+    like the data-dict path."""
+    from repro.core.handlers import reparam
+    from repro.core.reparam import LocScaleReparam
+
+    def m():
+        mu = pc.sample("mu", dist.Normal(0.0, 1.0))
+        pc.sample("theta", dist.Normal(mu, 1.0))
+
+    wrapped = reparam(m, config={"theta": LocScaleReparam(0.0)})
+    fn = lambda msg: jnp.array(3.0) if msg["name"] == "theta" else None
+    with pytest.raises(ValueError, match="deterministic site 'theta'"):
+        seed(substitute(wrapped, substitute_fn=fn), random.PRNGKey(0))()
+
+
+def test_plate_cache_invalidates_across_trace_episodes():
+    """Regression: a plate constructed outside the model fn must redraw per
+    execution — never reuse a stale (possibly traced) index cache."""
+    p = pc.plate("N", 10, subsample_size=4)
+
+    def m():
+        with p as idx:
+            return idx
+
+    # loop enough iterations that allocator id-reuse would be exposed if the
+    # episode tracking were identity-based rather than a global counter
+    draws = [tuple(seed(m, random.PRNGKey(i))().tolist()) for i in range(20)]
+    assert len(set(draws)) > 15, (
+        f"minibatch froze across executions: {len(set(draws))}/20 distinct")
+
+    # and under jit: the first trace caches tracers; a second jit wrapper
+    # retraces and must not reuse them
+    f0 = jax.jit(lambda k: seed(m, k)())
+    f1 = jax.jit(lambda k: seed(m, k)())
+    a = f0(random.PRNGKey(0))
+    b = f1(random.PRNGKey(0))
+    assert jnp.array_equal(a, b)  # same key, same minibatch, no tracer leak
+
+    # within one execution, re-entry still shares the minibatch
+    def m2():
+        with p as i_first:
+            pass
+        with p as i_second:
+            pass
+        return i_first, i_second
+
+    a2, b2 = seed(m2, random.PRNGKey(2))()
+    assert jnp.array_equal(a2, b2)
+
+
+def test_predictive_output_roundtrips_into_log_likelihood():
+    """Regression: Predictive's default output includes deterministic sites;
+    feeding it back into substitute-based utilities must not raise."""
+    from repro.core.infer import Predictive, log_likelihood
+
+    def m(x, y=None):
+        w = pc.sample("w", dist.Normal(0.0, 1.0))
+        pc.deterministic("w2", w ** 2)
+        pc.sample("y", dist.Normal(w * x, 1.0), obs=y)
+
+    x = jnp.arange(4.0)
+    draws = Predictive(m, num_samples=5)(random.PRNGKey(0), x)
+    assert "w2" in draws
+    ll = log_likelihood(m, draws, x, y=jnp.zeros(4))
+    assert ll["y"].shape == (5, 4)

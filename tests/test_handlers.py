@@ -98,7 +98,8 @@ def test_plate_expands_and_scales():
 
     x = seed(m, random.PRNGKey(0))()
     assert x.shape == (5,)
-    lp, tr = log_density(m, (), {}, {"x": jnp.zeros(5)})
+    lp, tr = log_density(seed(m, random.PRNGKey(0)), (), {},
+                         {"x": jnp.zeros(5)})
     expected = 2.0 * dist.Normal(0.0, 1.0).log_prob(jnp.zeros(5)).sum()
     assert jnp.allclose(lp, expected)
 

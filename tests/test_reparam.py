@@ -1,0 +1,267 @@
+"""Reparameterization: the `reparam` handler + strategy library.
+
+Every test drives the real handler stack: strategies issue auxiliary sample
+sites that must be seeded/traced/substituted like hand-written ones, and the
+whole composition must be invisible to jit/vmap/grad (paper Sec 2).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.handlers import reparam, seed, substitute, trace
+from repro.core.infer import log_density
+from repro.core.reparam import LocScaleReparam, Reparam, TransformReparam
+
+
+def funnel():
+    mu = pc.sample("mu", dist.Normal(0.0, 3.0))
+    tau = pc.sample("tau", dist.HalfNormal(3.0))
+    with pc.plate("J", 5):
+        theta = pc.sample("theta", dist.Normal(mu, tau))
+    return theta
+
+
+NC = {"theta": LocScaleReparam(0.0)}
+
+
+def test_locscale_sites_and_shapes():
+    tr = trace(seed(reparam(funnel, config=NC), random.PRNGKey(0))).get_trace()
+    assert tr["theta_decentered"]["type"] == "sample"
+    assert not tr["theta_decentered"]["is_observed"]
+    assert tr["theta"]["type"] == "deterministic"
+    assert tr["theta"]["value"].shape == (5,)
+    # deterministic identity: theta == mu + tau * eps for centered=0
+    expected = (tr["mu"]["value"]
+                + tr["tau"]["value"] * tr["theta_decentered"]["value"])
+    assert jnp.allclose(tr["theta"]["value"], expected, atol=1e-6)
+
+
+def test_locscale_density_invariance():
+    """p(mu, tau, theta) == p(mu, tau, eps) |d theta / d eps|^-1 ... for the
+    loc-scale family the change of variables is exact: the non-centered joint
+    at eps must equal the centered joint at theta = mu + tau*eps minus the
+    log-Jacobian J = 5 * log(tau)."""
+    mu, tau, eps = jnp.array(0.7), jnp.array(1.3), jnp.arange(5.0) / 3 - 0.5
+    lp_nc, tr = log_density(
+        seed(reparam(funnel, config=NC), random.PRNGKey(0)), (), {},
+        {"mu": mu, "tau": tau, "theta_decentered": eps})
+    theta = tr["theta"]["value"]
+    lp_c, _ = log_density(seed(funnel, random.PRNGKey(0)), (), {},
+                          {"mu": mu, "tau": tau, "theta": theta})
+    assert jnp.allclose(lp_nc, lp_c + 5 * jnp.log(tau), atol=1e-4)
+
+
+def test_locscale_partial_centering():
+    """centered=0.5 interpolates; centered=1.0 is the identity."""
+    tr = trace(seed(reparam(funnel, config={"theta": LocScaleReparam(0.5)}),
+                    random.PRNGKey(0))).get_trace()
+    mu, tau = tr["mu"]["value"], tr["tau"]["value"]
+    dec = tr["theta_decentered"]["value"]
+    expected = mu + jnp.sqrt(tau) * (dec - 0.5 * mu)
+    assert jnp.allclose(tr["theta"]["value"], expected, atol=1e-5)
+
+    tr1 = trace(seed(reparam(funnel, config={"theta": LocScaleReparam(1.0)}),
+                     random.PRNGKey(0))).get_trace()
+    assert "theta_decentered" not in tr1
+    assert tr1["theta"]["type"] == "sample"
+
+
+def test_transform_reparam():
+    def model():
+        return pc.sample("z", dist.TransformedDistribution(
+            dist.Normal(0.0, 1.0), dist.AffineTransform(3.0, 2.0)))
+
+    tr = trace(seed(reparam(model, config={"z": TransformReparam()}),
+                    random.PRNGKey(0))).get_trace()
+    assert tr["z"]["type"] == "deterministic"
+    assert jnp.allclose(tr["z"]["value"],
+                        3.0 + 2.0 * tr["z_base"]["value"], atol=1e-6)
+
+
+def test_transformed_distribution_log_prob_matches_lognormal():
+    td = dist.TransformedDistribution(dist.Normal(0.5, 1.3),
+                                      dist.transforms.ExpTransform())
+    v = jnp.array([0.3, 1.0, 2.5])
+    assert jnp.allclose(td.log_prob(v), dist.LogNormal(0.5, 1.3).log_prob(v),
+                        atol=1e-5)
+    x = td.sample(rng_key=random.PRNGKey(0), sample_shape=(100,))
+    assert x.shape == (100,) and bool(jnp.all(x > 0))
+
+
+def test_reparam_observed_site_raises():
+    def model(y=None):
+        pc.sample("y", dist.Normal(0.0, 1.0), obs=y)
+
+    with pytest.raises(ValueError, match="observed"):
+        seed(reparam(model, config={"y": LocScaleReparam(0.0)}),
+             random.PRNGKey(0))(jnp.array(1.0))
+
+
+def test_reparam_callable_config():
+    config = (lambda msg: LocScaleReparam(0.0)
+              if msg["name"] == "theta" else None)
+    tr = trace(seed(reparam(funnel, config=config),
+                    random.PRNGKey(0))).get_trace()
+    assert "theta_decentered" in tr and tr["mu"]["type"] == "sample"
+
+
+def test_reparam_composes_with_jit_vmap_grad():
+    """New-handler contract: reparam'd densities differentiate and batch."""
+    def lp(key, mu):
+        return log_density(
+            seed(reparam(funnel, config=NC), key), (), {},
+            {"mu": mu, "tau": jnp.array(1.0),
+             "theta_decentered": jnp.zeros(5)})[0]
+
+    keys = random.split(random.PRNGKey(0), 3)
+    mus = jnp.arange(3.0)
+    out = jax.jit(jax.vmap(jax.grad(lp, argnums=1)))(keys, mus)
+    assert out.shape == (3,)
+    # d/dmu [ log N(mu; 0, 3) ] = -mu/9 (theta term drops out at eps=0)
+    assert jnp.allclose(out, -mus / 9.0, atol=1e-5)
+
+
+def test_reparam_substitution_of_auxiliary():
+    """Auxiliary sites are first-class: substituting them pins the original
+    site's deterministic value (the mechanism Predictive relies on)."""
+    m = substitute(seed(reparam(funnel, config=NC), random.PRNGKey(0)),
+                   data={"mu": jnp.array(2.0), "tau": jnp.array(1.0),
+                         "theta_decentered": jnp.zeros(5)})
+    tr = trace(m).get_trace()
+    assert jnp.allclose(tr["theta"]["value"], jnp.full(5, 2.0), atol=1e-6)
+
+
+def test_custom_strategy_swap_fn():
+    """A strategy may return (new_fn, None) to merely swap the distribution."""
+    class Widen(Reparam):
+        def __call__(self, name, fn, obs):
+            return dist.Normal(0.0, 10.0), None
+
+    tr = trace(seed(reparam(lambda: pc.sample("z", dist.Normal(0.0, 1.0)),
+                            config={"z": Widen()}),
+                    random.PRNGKey(0))).get_trace()
+    assert float(tr["z"]["fn"].scale) == 10.0
+
+
+def test_eight_schools_noncentered_converges_where_centered_does_not():
+    """ISSUE 3 acceptance: at short-chain settings the centered funnel fails
+    the R-hat 1.05 cut while LocScaleReparam's non-centered form passes on
+    every site — both through the same jit-compiled vectorized executor."""
+    from repro.core.infer import MCMC, NUTS, gelman_rubin
+
+    y = jnp.array([28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0])
+    sigma = jnp.array([15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0])
+
+    def eight_schools(y=None):
+        mu = pc.sample("mu", dist.Normal(0.0, 5.0))
+        tau = pc.sample("tau", dist.HalfCauchy(5.0))
+        with pc.plate("J", 8):
+            theta = pc.sample("theta", dist.Normal(mu, tau))
+            pc.sample("obs", dist.Normal(theta, sigma), obs=y)
+
+    def worst_rhat(model):
+        mcmc = MCMC(NUTS(model), num_warmup=150, num_samples=200,
+                    num_chains=4)
+        mcmc.run(random.PRNGKey(0), y=y)
+        return max(float(jnp.max(jnp.asarray(gelman_rubin(v))))
+                   for v in mcmc.get_samples(group_by_chain=True).values())
+
+    rhat_c = worst_rhat(eight_schools)
+    rhat_nc = worst_rhat(reparam(eight_schools,
+                                 config={"theta": LocScaleReparam(0.0)}))
+    assert rhat_nc < 1.05, f"non-centered failed to converge: {rhat_nc}"
+    assert rhat_c > rhat_nc, (
+        f"reparameterization did not improve mixing ({rhat_c} vs {rhat_nc})")
+    assert rhat_c >= 1.05, (
+        f"centered unexpectedly converged at short-chain settings: {rhat_c}")
+
+
+def test_callable_config_does_not_recurse_on_auxiliary_sites():
+    """Regression: a blanket callable config must not reparameterize the
+    auxiliary sites the strategies themselves emit (unbounded recursion)."""
+    def model():
+        return pc.sample("theta", dist.Normal(1.0, 2.0))
+
+    blanket = reparam(model, config=lambda msg: LocScaleReparam(0.0))
+    tr = trace(seed(blanket, random.PRNGKey(0))).get_trace()
+    assert set(tr) == {"theta_decentered", "theta"}
+    assert tr["theta_decentered"]["infer"]["reparam_auxiliary"]
+
+
+def test_transformed_distribution_broadcasts_batched_transform_params():
+    """Regression: batched AffineTransform params must yield independent base
+    draws per component, not one shared epsilon."""
+    locs, scales = jnp.zeros(8), jnp.arange(1.0, 9.0)
+    td = dist.TransformedDistribution(dist.Normal(0.0, 1.0),
+                                      dist.AffineTransform(locs, scales))
+    assert td.batch_shape == (8,)
+    x = td.sample(rng_key=random.PRNGKey(0))
+    assert x.shape == (8,)
+    eps = x / scales
+    assert len({round(float(e), 4) for e in eps}) == 8  # independent draws
+    assert jnp.allclose(td.log_prob(x),
+                        dist.Normal(locs, scales).log_prob(x), atol=1e-5)
+
+    # TransformReparam inherits the corrected shape for the base site
+    def model():
+        return pc.sample("z", dist.TransformedDistribution(
+            dist.Normal(0.0, 1.0), dist.AffineTransform(locs, scales)))
+
+    tr = trace(seed(reparam(model, config={"z": TransformReparam()}),
+                    random.PRNGKey(0))).get_trace()
+    assert tr["z_base"]["value"].shape == (8,)
+    base = tr["z_base"]["value"]
+    assert len({round(float(b), 4) for b in base}) == 8
+
+
+def test_substituted_value_into_reparamed_site_raises():
+    """Regression: an inner substitute pinning the original site must fail
+    loudly — the strategy would otherwise sample fresh auxiliaries and
+    silently evaluate elsewhere."""
+    from repro.core.handlers import reparam as reparam_h
+
+    inner = substitute(funnel, {"theta": jnp.zeros(5)})
+    with pytest.raises(ValueError, match="configured for reparameterization"):
+        seed(reparam_h(inner, config=NC), random.PRNGKey(0))()
+
+
+def test_transformed_distribution_unrepresentable_support_raises():
+    """Regression: a constraining transform followed by an affine has a
+    support we cannot express — fail at setup, not with NaNs mid-chain."""
+    td = dist.TransformedDistribution(
+        dist.Normal(0.0, 1.0),
+        [dist.transforms.ExpTransform(), dist.AffineTransform(1.0, 1.0)])
+    with pytest.raises(NotImplementedError, match="constraining non-final"):
+        td.support
+    # affine-then-constraining is fine: support is the final codomain
+    ok = dist.TransformedDistribution(
+        dist.Normal(0.0, 1.0),
+        [dist.AffineTransform(1.0, 2.0), dist.transforms.ExpTransform()])
+    assert ok.support is ok.transforms[-1].codomain
+
+
+def test_transformed_distribution_constrained_base_support_raises():
+    """Regression: a constrained base (e.g. Exponential) pushed through a
+    real-codomain transform must not report support=real (biject_to would
+    hand inference an identity bijection and log_prob diverges off-support)."""
+    td = dist.TransformedDistribution(dist.Exponential(1.0),
+                                      dist.AffineTransform(0.0, 1.0))
+    with pytest.raises(NotImplementedError, match="not representable"):
+        td.support
+
+
+def test_transformed_distribution_log_prob_broadcasts_scalar_value():
+    """Regression: a scalar value against batched transform params must score
+    per-component, not sum the Jacobians across the batch."""
+    td = dist.TransformedDistribution(
+        dist.Normal(0.0, 1.0),
+        dist.AffineTransform(jnp.array([0.0, 1.0, 2.0]),
+                             jnp.array([1.0, 2.0, 3.0])))
+    got = td.log_prob(jnp.array(1.5))
+    want = dist.Normal(jnp.array([0.0, 1.0, 2.0]),
+                       jnp.array([1.0, 2.0, 3.0])).log_prob(1.5)
+    assert got.shape == (3,)
+    assert jnp.allclose(got, want, atol=1e-5)
