@@ -67,6 +67,40 @@ def hmm_model(data):
 
 
 # ---------------------------------------------------------------------------
+# fully-latent HMM (no supervision, no manual marginalization): the hidden
+# states are summed out by the enumeration subsystem's `markov` combinator
+# at O(T·K²) inside the jit'd NUTS potential (benchmarks/enum_hmm.py)
+# ---------------------------------------------------------------------------
+
+def enum_hmm_data(K, rng_key=None, T=120, V=16):
+    key = rng_key if rng_key is not None else random.PRNGKey(0)
+    k1, k2, k3 = random.split(key, 3)
+    theta = dist.Dirichlet(jnp.full((K, K), 0.5)).sample(rng_key=k1)
+    phi = dist.Dirichlet(jnp.full((K, V), 0.3)).sample(rng_key=k2)
+    keys = random.split(k3, 2 * T)
+    z, ws = jnp.zeros((), jnp.int32), []
+    for t in range(T):
+        z = dist.Categorical(probs=theta[z]).sample(rng_key=keys[2 * t])
+        ws.append(dist.Categorical(probs=phi[z]).sample(rng_key=keys[2 * t + 1]))
+    return {"w": jnp.stack(ws), "K": K, "V": V}
+
+
+def enum_hmm_model(data):
+    from repro.core.infer import markov
+    K, V, w = data["K"], data["V"], data["w"]
+    theta = pc.sample("theta",
+                      dist.Dirichlet(jnp.full((K, K), 1.0)).to_event(1))
+    phi = pc.sample("phi", dist.Dirichlet(jnp.full((K, V), 1.0)).to_event(1))
+
+    def step(z_prev, w_t):
+        z = pc.sample("z", dist.Categorical(probs=theta[z_prev]))
+        pc.sample("w", dist.Categorical(probs=phi[z]), obs=w_t)
+        return z
+
+    markov(step, 0, w)
+
+
+# ---------------------------------------------------------------------------
 # logistic regression, CoverType-shaped (581012 x 54)
 # ---------------------------------------------------------------------------
 

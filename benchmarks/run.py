@@ -29,7 +29,7 @@ def _previous_headlines():
                        for m in ("ms_per_leapfrog", "ms_per_eff_sample",
                                  "wall_s")
                        if m in prev[k]}
-    for k in ("multichain", "svi_minibatch"):
+    for k in ("multichain", "svi_minibatch", "enum_hmm"):
         if isinstance(prev.get(k), dict):
             keep[k] = {"rows": prev[k].get("rows")}
     return keep or None
@@ -42,11 +42,18 @@ def main():
     out = {}
     previous = _previous_headlines()
 
-    from benchmarks import hmm, logreg, multichain, skim, svi_minibatch
+    from benchmarks import (enum_hmm, hmm, logreg, multichain, skim,
+                            svi_minibatch)
     print("=" * 70)
     print("Table 2a — HMM (time per leapfrog step)")
     print("=" * 70, flush=True)
     out["hmm"] = hmm.main(quick=quick)
+
+    print("=" * 70)
+    print("Enum HMM — fully latent states, ms/leapfrog vs K (markov + "
+          "enum_contract)")
+    print("=" * 70, flush=True)
+    out["enum_hmm"] = enum_hmm.main(quick=quick)
 
     print("=" * 70)
     print("Table 2a — logistic regression / CoverType-shaped")

@@ -1,0 +1,76 @@
+"""Gaussian mixture model with exact discrete marginalization.
+
+The component assignment ``z_i`` is a latent ``Categorical`` — a site NUTS
+cannot move.  Nothing in the model says so: the enumeration subsystem
+(`repro.core.infer.enum`) detects the enumerable discrete latent during
+``initialize_model``, broadcasts its support into a fresh leftmost batch dim,
+and sums it out inside every (jit-compiled) potential-energy evaluation, so
+the *same* chunked-scan NUTS executor that runs continuous models samples
+``weights``/``mu``/``sigma`` from the exactly-marginalized posterior.
+
+Afterwards, ``infer_discrete`` recovers the assignments' posterior given the
+continuous draws (exact conditioning on the enumeration tensor), and the
+diagnostics summary reports the integer-valued sites as mode/frequency
+instead of meaningless R-hat.
+
+    PYTHONPATH=src python examples/gmm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.handlers import substitute
+from repro.core.infer import MCMC, NUTS, infer_discrete, print_summary
+
+K, N = 2, 80
+
+
+def make_data(rng_key):
+    k1, k2 = random.split(rng_key)
+    comp = random.bernoulli(k1, 0.35, (N,)).astype(jnp.int32)
+    x = jnp.where(comp == 1, 2.5, -2.5) + 0.6 * random.normal(k2, (N,))
+    return x, comp
+
+
+def gmm(x):
+    weights = pc.sample("weights", dist.Dirichlet(jnp.ones(K)))
+    mu = pc.sample("mu",
+                   dist.Normal(jnp.zeros(K), 5.0 * jnp.ones(K)).to_event(1))
+    sigma = pc.sample("sigma", dist.HalfNormal(2.0))
+    with pc.plate("data", x.shape[0]):
+        z = pc.sample("z", dist.Categorical(probs=weights))
+        pc.sample("obs", dist.Normal(mu[z], sigma), obs=x)
+
+
+def main():
+    x, comp = make_data(random.PRNGKey(0))
+
+    # one compiled program: warmup + sampling, z marginalized per leapfrog
+    mcmc = MCMC(NUTS(gmm), num_warmup=300, num_samples=300)
+    mcmc.run(random.PRNGKey(1), x)
+    samples = mcmc.get_samples()
+    print("continuous sites sampled by NUTS:", sorted(samples))
+    mcmc.print_summary()
+
+    # posterior assignments given the last 64 continuous draws, vmapped
+    tail = {k: v[-64:] for k, v in samples.items()}
+    keys = random.split(random.PRNGKey(2), 64)
+
+    def assignments(draw, key):
+        return infer_discrete(substitute(gmm, data=draw), key)(x)["z"]
+
+    zs = jax.vmap(assignments)(tail, keys)          # (64, N) int32
+    print_summary({"z": np.asarray(zs)[None, :, :8]})  # first 8 points
+
+    z_mode = np.asarray((zs.mean(0) > 0.5).astype(np.int32))
+    acc = float(np.mean(z_mode == np.asarray(comp)))
+    acc = max(acc, 1.0 - acc)  # mixtures are label-symmetric
+    print(f"\nassignment accuracy vs ground truth: {acc:.3f}")
+    assert acc > 0.95
+
+
+if __name__ == "__main__":
+    main()

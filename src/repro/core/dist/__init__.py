@@ -26,7 +26,7 @@ from .continuous import (
     Normal,
     StudentT,
 )
-from .discrete import Bernoulli, Categorical
+from .discrete import Bernoulli, Categorical, DiscreteUniform
 from .distribution import (
     Distribution,
     ExpandedDistribution,
@@ -43,6 +43,7 @@ __all__ = [
     "Cauchy",
     "Delta",
     "Dirichlet",
+    "DiscreteUniform",
     "Distribution",
     "ExpandedDistribution",
     "Exponential",

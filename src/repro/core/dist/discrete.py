@@ -1,9 +1,13 @@
-"""Discrete distributions (Bernoulli, Categorical).
+"""Discrete distributions (Bernoulli, Categorical, DiscreteUniform).
 
-Both accept either ``probs`` or ``logits`` (exactly one) and compute
-``log_prob`` in logit space for numerical stability.  Their supports are
-discrete constraints with no ``biject_to`` bijection: use them as observed
-sites or marginalize (see ``benchmarks/models.py``'s collapsed HMM).
+``Bernoulli``/``Categorical`` accept either ``probs`` or ``logits`` (exactly
+one) and compute ``log_prob`` natively in logit space — the ``logits``
+parameterization never round-trips through probabilities, so densities stay
+finite for extreme logits.  All three have finite supports and implement
+``enumerate_support``, which is what lets the enumeration subsystem
+(:mod:`repro.core.infer.enum`) marginalize them exactly instead of requiring
+a ``biject_to`` bijection: use them as observed sites, or leave them latent
+and let ``log_density``/NUTS sum them out.
 """
 from __future__ import annotations
 
@@ -19,10 +23,21 @@ def _clip_probs(probs):
     return jnp.clip(probs, eps, 1.0 - eps)
 
 
+def _enum_values(num, batch_shape, expand):
+    """(K,) + (1,)*len(batch_shape) int32 support stack, broadcast on
+    request — the shared tail of every ``enumerate_support``."""
+    values = jnp.arange(num, dtype=jnp.int32)
+    values = values.reshape((num,) + (1,) * len(batch_shape))
+    if expand:
+        values = jnp.broadcast_to(values, (num,) + tuple(batch_shape))
+    return values
+
+
 class Bernoulli(Distribution):
     arg_constraints = {"probs": constraints.unit_interval,
                        "logits": constraints.real}
     support = constraints.boolean
+    has_enumerate_support = True
 
     def __init__(self, probs=None, logits=None):
         if (probs is None) == (logits is None):
@@ -52,10 +67,14 @@ class Bernoulli(Distribution):
         logits = self._logits()
         return value * logits - jax.nn.softplus(logits)
 
+    def enumerate_support(self, expand=True):
+        return _enum_values(2, self.batch_shape, expand)
+
 
 class Categorical(Distribution):
     arg_constraints = {"probs": constraints.simplex,
                        "logits": constraints.real_vector}
+    has_enumerate_support = True
 
     def __init__(self, probs=None, logits=None):
         if (probs is None) == (logits is None):
@@ -89,3 +108,46 @@ class Categorical(Distribution):
         log_pmf = jnp.broadcast_to(log_pmf, batch + (self._num_categories,))
         value = jnp.broadcast_to(value, batch)
         return jnp.take_along_axis(log_pmf, value[..., None], axis=-1)[..., 0]
+
+    def enumerate_support(self, expand=True):
+        return _enum_values(self._num_categories, self.batch_shape, expand)
+
+
+class DiscreteUniform(Distribution):
+    """Uniform over the integers ``low .. high`` (both inclusive).
+
+    ``low``/``high`` are static Python ints (pytree aux data): the support
+    size must be known at trace time for ``enumerate_support`` to produce a
+    statically-shaped stack.
+    """
+
+    arg_constraints: dict = {}
+    pytree_aux_fields = ("low", "high")
+    has_enumerate_support = True
+
+    def __init__(self, low=0, high=1):
+        low, high = int(low), int(high)
+        if high < low:
+            raise ValueError(
+                f"DiscreteUniform needs low <= high, got [{low}, {high}]")
+        self.low = low
+        self.high = high
+        super().__init__(())
+
+    @property
+    def support(self):
+        return constraints.integer_interval(self.low, self.high)
+
+    def sample(self, rng_key=None, sample_shape=()):
+        return jax.random.randint(rng_key, self.shape(sample_shape),
+                                  self.low, self.high + 1, dtype=jnp.int32)
+
+    def log_prob(self, value):
+        in_support = self.support(value)
+        n = self.high - self.low + 1
+        lp = jnp.full(jnp.shape(value), -jnp.log(float(n)))
+        return jnp.where(in_support, lp, -jnp.inf)
+
+    def enumerate_support(self, expand=True):
+        return _enum_values(self.high - self.low + 1, self.batch_shape,
+                            expand) + self.low

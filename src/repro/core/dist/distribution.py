@@ -36,6 +36,10 @@ class Distribution:
     arg_constraints: dict = {}
     support: Optional[constraints.Constraint] = None
     pytree_aux_fields: Tuple[str, ...] = ()
+    # distributions with a finite, statically-known support set this True and
+    # implement ``enumerate_support`` — the hook the enumeration subsystem
+    # (repro.core.infer.enum) uses to marginalize discrete latents exactly
+    has_enumerate_support: bool = False
 
     def __init__(self, batch_shape=(), event_shape=()):
         self._batch_shape = tuple(batch_shape)
@@ -80,6 +84,17 @@ class Distribution:
 
     def log_prob(self, value):
         raise NotImplementedError
+
+    def enumerate_support(self, expand=True):
+        """All values of a finite support, stacked along a fresh leftmost dim.
+
+        Returns an integer array of shape ``(K,) + batch_shape`` (``expand=
+        True``) or ``(K,) + (1,) * len(batch_shape)`` (``expand=False``, the
+        broadcast-ready form the ``enum`` handler installs).  Only defined
+        when ``has_enumerate_support``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no enumerate_support: only discrete "
+            "distributions with finite support can be enumerated")
 
     def __call__(self, *args, rng_key=None, sample_shape=(), **kwargs):
         return self.sample(rng_key=rng_key, sample_shape=sample_shape)
@@ -200,6 +215,19 @@ class ExpandedDistribution(Distribution):
     @property
     def support(self):
         return self.base_dist.support
+
+    @property
+    def has_enumerate_support(self):
+        return self.base_dist.has_enumerate_support
+
+    def enumerate_support(self, expand=True):
+        values = self.base_dist.enumerate_support(expand=False)
+        values = values.reshape(values.shape[:1]
+                                + (1,) * len(self._batch_shape))
+        if expand:
+            values = jnp.broadcast_to(values,
+                                      values.shape[:1] + self._batch_shape)
+        return values
 
     def sample(self, rng_key=None, sample_shape=()):
         lead = self._batch_shape[:len(self._batch_shape)

@@ -170,6 +170,17 @@ _REPARAMED_SITE_ERR = (
     "(e.g. '{name}_decentered' / '{name}_base'), or drop the site's reparam "
     "strategy.")
 
+# An enumerated site's "value" is its full support broadcast into a fresh
+# enumeration dim (see repro.core.infer.enum); overwriting it from outside
+# would silently corrupt the marginalization, so it is a loud error.  A
+# condition/substitute *inside* the enum handler still works: the site is
+# valued/observed before the enum handler sees it, so it never enumerates.
+_ENUMERATED_SITE_ERR = (
+    "cannot {handler} site '{name}': it is being enumerated (its value is "
+    "the distribution's full support, not a free choice). Apply {handler} "
+    "inside the enum handler, or drop the site's "
+    "infer={{'enumerate': 'parallel'}} mark.")
+
 
 def _default_param_init(key, shape, dtype):
     if len(shape) == 0:
@@ -213,6 +224,9 @@ class substitute(Messenger):
                     handler="substitute", name=msg["name"]))
             return  # ordinary deterministic: recomputed from the same
                     # substituted latents, so the injection is redundant
+        if msg["infer"].get("_enumerate_dim") is not None:
+            raise ValueError(_ENUMERATED_SITE_ERR.format(
+                handler="substitute", name=msg["name"]))
         msg["value"] = value
 
 
@@ -235,6 +249,9 @@ class condition(Messenger):
             raise ValueError(_REPARAMED_SITE_ERR.format(
                 handler="condition", name=msg["name"]))
         if msg["type"] == "sample" and msg["name"] in self.data:
+            if msg["infer"].get("_enumerate_dim") is not None:
+                raise ValueError(_ENUMERATED_SITE_ERR.format(
+                    handler="condition", name=msg["name"]))
             msg["value"] = self.data[msg["name"]]
             msg["is_observed"] = True
 
@@ -324,6 +341,9 @@ class do(Messenger):
             raise ValueError(_REPARAMED_SITE_ERR.format(
                 handler="do", name=msg["name"]))
         if msg["type"] == "sample" and msg["name"] in self.data:
+            if msg["infer"].get("_enumerate_dim") is not None:
+                raise ValueError(_ENUMERATED_SITE_ERR.format(
+                    handler="do", name=msg["name"]))
             msg["value"] = self.data[msg["name"]]
             msg["stop"] = True
 

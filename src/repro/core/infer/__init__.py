@@ -6,6 +6,13 @@ from .diagnostics import (
     print_summary,
     summary,
 )
+from .enum import (
+    config_enumerate,
+    contract_enum_factors,
+    enum,
+    infer_discrete,
+    markov,
+)
 from .hmc import (
     HMC,
     NUTS,
@@ -34,6 +41,8 @@ __all__ = [
     "HMC", "NUTS", "HMCState", "MCMC", "SVI", "SVIState", "Trace_ELBO",
     "KernelSetup", "SamplerKernel", "init_state", "sample",
     "hmc_setup", "hmc_init", "nuts_setup", "nuts_init",
+    "config_enumerate", "contract_enum_factors", "enum", "infer_discrete",
+    "markov",
     "AutoNormal", "Predictive", "log_density", "log_likelihood",
     "potential_energy", "transform_fn", "constrain_fn", "initialize_model",
     "initialize_model_structure", "find_valid_initial_params",

@@ -80,12 +80,40 @@ def hpdi(x, prob=0.9, axis=0):
     return np.squeeze(lo, axis), np.squeeze(hi, axis)
 
 
+def _discrete_summary(flat):
+    """Per-element mode / mode frequency / support size for integer-dtype
+    draws (e.g. ``infer_discrete`` output): continuous moments and
+    R-hat/ESS are meaningless for unordered discrete states."""
+    n_elem = flat.shape[-1]
+    modes = np.empty(n_elem, flat.dtype)
+    mode_freq = np.empty(n_elem)
+    n_unique = np.empty(n_elem, np.int64)
+    for i in range(n_elem):
+        vals, counts = np.unique(flat[..., i], return_counts=True)
+        j = int(np.argmax(counts))
+        modes[i] = vals[j]
+        mode_freq[i] = counts[j] / flat[..., i].size
+        n_unique[i] = len(vals)
+    return {"mode": modes, "mode_freq": mode_freq, "n_unique": n_unique,
+            "mean": flat.mean((0, 1))}
+
+
 def summary(samples_by_chain, prob=0.9):
-    """Dict of per-site statistics; values shaped (chains, samples, ...)."""
+    """Dict of per-site statistics; values shaped (chains, samples, ...).
+
+    Float sites get the usual moments plus split R-hat and ESS.  Integer or
+    boolean sites (discrete draws, as produced by ``infer_discrete``) instead
+    report ``mode`` / ``mode_freq`` / ``n_unique`` (+ ``mean``) — counts of
+    states, not chain-mixing statistics.
+    """
     out = {}
     for name, x in samples_by_chain.items():
         x = np.asarray(x)
         flat = x.reshape(x.shape[0], x.shape[1], -1)
+        if np.issubdtype(flat.dtype, np.integer) or flat.dtype == np.bool_:
+            stats = _discrete_summary(flat)
+            out[name] = {k: v.reshape(x.shape[2:]) for k, v in stats.items()}
+            continue
         stats = {
             "mean": flat.mean((0, 1)),
             "std": flat.std((0, 1)),
@@ -105,6 +133,15 @@ def print_summary(samples_by_chain, prob=0.9):
              f"{'n_eff':>10} {'r_hat':>8}"
     print(header)
     for name, s in stats.items():
+        if "mode" in s:  # discrete (integer-dtype) site
+            mode = np.atleast_1d(s["mode"]).ravel()
+            freq = np.atleast_1d(s["mode_freq"]).ravel()
+            nu = np.atleast_1d(s["n_unique"]).ravel()
+            for i in range(mode.size):
+                label = name if mode.size == 1 else f"{name}[{i}]"
+                print(f"{label:>20} mode={mode[i]:<6d} "
+                      f"freq={freq[i]:<7.3f} n_unique={nu[i]:<4d} (discrete)")
+            continue
         mean = np.atleast_1d(s["mean"]).ravel()
         std = np.atleast_1d(s["std"]).ravel()
         med = np.atleast_1d(s["median"]).ravel()

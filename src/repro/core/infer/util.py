@@ -30,20 +30,36 @@ def log_density(model, model_args, model_kwargs, params):
     carry no density).  A subsampled plate therefore yields an unbiased
     minibatch estimate of the full-data log density: each enclosed site is
     scaled by ``size / subsample_size``.
+
+    The accumulator is *enumeration-aware*: a first, inert probe pass detects
+    sites marked ``infer={"enumerate": "parallel"}`` (or chains built with
+    :func:`~repro.core.infer.enum.markov`) and measures the deepest
+    plate/batch dim.  If any are found, the trace is re-run under an
+    :class:`~repro.core.infer.enum.enum` handler that broadcasts each such
+    site's full support into fresh leftmost dims, and those dims are summed
+    out exactly by :func:`~repro.core.infer.enum.contract_enum_factors` —
+    the returned ``log_joint`` is the discrete-marginalized joint density,
+    still a pure, differentiable function of ``params``.  Models without
+    enumeration marks take the plain single-pass path unchanged.
     """
-    substituted = substitute(model, data=params)
+    from .enum import _EnumProbe, _first_available_dim, contract_enum_factors
+    from .enum import enum as _enum
+
+    probe = _EnumProbe(model)
+    substituted = substitute(probe, data=params)
     tr = trace(substituted).get_trace(*model_args, **model_kwargs)
+    if probe.found:
+        enum_handler = _enum(model,
+                             first_available_dim=_first_available_dim(probe))
+        substituted = substitute(enum_handler, data=params)
+        tr = trace(substituted).get_trace(*model_args, **model_kwargs)
+        return contract_enum_factors(tr), tr
+    from .enum import _site_log_prob
     log_joint = jnp.zeros(())
     for site in tr.values():
         if site["type"] != "sample":
             continue
-        value = site["value"]
-        lp = site["fn"].log_prob(value)
-        if site["mask"] is not None:
-            lp = jnp.where(site["mask"], lp, 0.0)
-        if site["scale"] is not None:
-            lp = lp * site["scale"]
-        log_joint = log_joint + jnp.sum(lp)
+        log_joint = log_joint + jnp.sum(_site_log_prob(site))
     return log_joint, tr
 
 
@@ -61,7 +77,14 @@ def get_model_transforms(model, model_args=(), model_kwargs=None, rng_key=None):
     transforms, latent_shapes = {}, {}
     for name, site in tr.items():
         if site["type"] == "sample" and not site["is_observed"]:
-            support = site["fn"].support
+            fn = site["fn"]
+            if (site["infer"].get("enumerate") == "parallel"
+                    or getattr(fn, "has_enumerate_support", False)):
+                # enumerable discrete latent: no bijection to R^n — the
+                # enum-aware log_density marginalizes it instead, so it is
+                # simply not part of the continuous latent vector
+                continue
+            support = fn.support
             transforms[name] = biject_to(support)
             latent_shapes[name] = jnp.shape(site["value"])
     return transforms, tr
@@ -101,12 +124,22 @@ def initialize_model_structure(rng_key, model, model_args=(),
 
     Returns ``(potential_fn_flat, unravel_fn, transforms, constrain,
     model_trace, flat_prototype)``.
+
+    Models with enumerable discrete latents need no special treatment from
+    the caller: the model is wrapped in
+    :func:`~repro.core.infer.enum.config_enumerate` (inert otherwise), those
+    sites are excluded from the continuous latent vector, and every
+    potential-energy evaluation marginalizes them through the enum-aware
+    :func:`log_density` — so the existing jit-compiled NUTS executor runs
+    mixture/HMM models with untouched model code.
     """
+    from .enum import config_enumerate
     model_kwargs = model_kwargs or {}
+    model = config_enumerate(model)
     transforms, tr = get_model_transforms(model, model_args, model_kwargs,
                                           rng_key)
     if not transforms:
-        raise ValueError("model has no latent sample sites")
+        raise ValueError("model has no continuous latent sample sites")
 
     # prototype unconstrained pytree (used for ravel/unravel structure)
     proto = {}
@@ -289,10 +322,22 @@ class Predictive:
 
 
 def log_likelihood(model, posterior_samples, *args, **kwargs):
-    """Per-sample log likelihood of observed sites, vectorized with vmap."""
+    """Per-sample log likelihood of observed sites, vectorized with vmap.
+
+    Models with enumerable discrete latents need those latents *pinned*:
+    NUTS marginalizes them, so they are absent from ``get_samples()`` — pass
+    :func:`~repro.core.infer.enum.infer_discrete` draws alongside the
+    continuous ones (``{**samples, **discrete_samples}``).  A per-site
+    marginalized likelihood is not well-defined once a discrete latent
+    couples several sites, so an unpinned enumerable latent raises instead
+    of crashing mid-trace.
+    """
     def single(samples):
+        from .enum import RequirePinnedDiscrete
+
         m = substitute(model, data=samples)
-        tr = trace(m).get_trace(*args, **kwargs)
+        with RequirePinnedDiscrete(what="log_likelihood"):
+            tr = trace(m).get_trace(*args, **kwargs)
         return {
             name: site["fn"].log_prob(site["value"])
             for name, site in tr.items()

@@ -61,6 +61,16 @@ def leapfrog_halfstep(z, r, grad, m_inv, eps):
     return leapfrog_halfstep_ref(z, r, grad, m_inv, eps)
 
 
+def enum_contract(log_alpha, log_mat):
+    """Logsumexp chain-elimination step of discrete enumeration:
+    ``out[..., j] = logsumexp_i(log_alpha[..., i] + log_mat[..., i, j])``.
+    One VMEM pass under Pallas; stabilized jnp reference otherwise."""
+    if _STATE["pallas"]:
+        from .enum_contract import enum_contract as _k
+        return _k(log_alpha, log_mat, interpret=_STATE["interpret"])
+    return ref.enum_contract(log_alpha, log_mat)
+
+
 def rmsnorm(x, weight, eps=1e-6):
     if _STATE["pallas"]:
         from .rmsnorm import rmsnorm as _k

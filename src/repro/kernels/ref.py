@@ -239,3 +239,27 @@ def ssd_decode_step(state, x, dt, A, B, C, *, D=None):
     if D is not None:
         y = y + D.astype(jnp.float32)[None, :, None] * xf
     return y.astype(x.dtype), new
+
+
+def enum_contract(log_alpha, log_mat):
+    """Stabilized logsumexp contraction of the enumeration forward pass:
+    ``out[..., j] = logsumexp_i(log_alpha[..., i] + log_mat[..., i, j])``.
+
+    This is one step of chain elimination (``markov``): ``log_alpha`` is the
+    forward message over the previous state, ``log_mat`` the per-step factor
+    ``log p(z_t=j | z_{t-1}=i) + log p(obs_t | z_t=j)``.  Written as the
+    exact formula the Pallas kernel computes (max, strictly left-to-right
+    exp-sum over the shared axis, log, with fully-masked columns pinned to
+    -inf) so the two paths stay bit-identical in interpret mode: ``jnp.sum``
+    would let XLA re-associate the reduction differently for the kernel's
+    lane-padded layout, while a sequential sum is order-pinned and the
+    kernel's padding rows only append exact ``+0.0`` terms.
+    """
+    x = log_alpha[..., :, None] + log_mat
+    m = jnp.max(x, axis=-2)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(x - m_safe[..., None, :])
+    s = e[..., 0, :]
+    for i in range(1, e.shape[-2]):
+        s = s + e[..., i, :]
+    return jnp.where(jnp.isfinite(m), jnp.log(s) + m_safe, -jnp.inf)

@@ -125,3 +125,96 @@ def test_expand_draws_iid():
     e = dist.ExpandedDistribution(dist.Normal(0.0, 1.0), (1000,))
     x = e.sample(rng_key=random.PRNGKey(0))
     assert x.shape == (1000,) and float(jnp.std(x)) > 0.5
+
+
+# ---------------------------------------------------------------------------
+# discrete family: logits-parameterized log_prob goldens + enumerate_support
+# ---------------------------------------------------------------------------
+
+@pytest.mark.enum
+def test_bernoulli_logits_log_prob_matches_scipy():
+    logits = np.array([-3.0, -0.5, 0.0, 1.2, 4.0])
+    xs = np.array([0, 1, 1, 0, 1])
+    d = dist.Bernoulli(logits=jnp.asarray(logits))
+    ref = sps.bernoulli(1.0 / (1.0 + np.exp(-logits)))
+    np.testing.assert_allclose(np.asarray(d.log_prob(jnp.asarray(xs))),
+                               ref.logpmf(xs), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.enum
+def test_bernoulli_extreme_logits_stay_finite():
+    """The logits parameterization must not round-trip through probs: at
+    +-40 the probability saturates in f32 but the log-density is linear."""
+    d = dist.Bernoulli(logits=jnp.array([-40.0, 40.0]))
+    lp = np.asarray(d.log_prob(jnp.array([1, 0])))
+    np.testing.assert_allclose(lp, [-40.0, -40.0], rtol=1e-6)
+
+
+@pytest.mark.enum
+def test_categorical_logits_log_prob_matches_scipy():
+    logits = np.array([0.3, -1.2, 2.0, 0.0])
+    probs = np.exp(logits) / np.exp(logits).sum()
+    d = dist.Categorical(logits=jnp.asarray(logits))
+    xs = np.arange(4)
+    ref = sps.multinomial(1, probs)
+    expected = np.array([ref.logpmf(np.eye(4)[i]) for i in xs])
+    np.testing.assert_allclose(np.asarray(d.log_prob(jnp.asarray(xs))),
+                               expected, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.enum
+def test_discrete_uniform_log_prob_matches_scipy():
+    d = dist.DiscreteUniform(2, 6)
+    ref = sps.randint(2, 7)
+    xs = np.array([1, 2, 4, 6, 7])
+    np.testing.assert_allclose(np.asarray(d.log_prob(jnp.asarray(xs))),
+                               ref.logpmf(xs), rtol=2e-5)
+    draws = d.sample(rng_key=random.PRNGKey(0), sample_shape=(500,))
+    assert draws.dtype == jnp.int32
+    assert int(draws.min()) >= 2 and int(draws.max()) <= 6
+
+
+@pytest.mark.enum
+@pytest.mark.parametrize("d,expected_unexpanded,expected_expanded", [
+    (dist.Bernoulli(probs=0.3), (2,), (2,)),
+    (dist.Bernoulli(logits=jnp.zeros((4,))), (2, 1), (2, 4)),
+    (dist.Categorical(probs=jnp.full((5, 3), 1 / 3)), (3, 1), (3, 5)),
+    (dist.Categorical(logits=jnp.zeros(6)), (6,), (6,)),
+    (dist.DiscreteUniform(1, 4), (4,), (4,)),
+], ids=["bern-scalar", "bern-batch", "cat-batch", "cat-logits", "duniform"])
+def test_enumerate_support_shapes_and_dtype(d, expected_unexpanded,
+                                            expected_expanded):
+    sup = d.enumerate_support(expand=False)
+    assert sup.shape == expected_unexpanded
+    assert jnp.issubdtype(sup.dtype, jnp.integer)
+    sup_e = d.enumerate_support(expand=True)
+    assert sup_e.shape == expected_expanded
+    # every slice along the enum dim is in the support, covering it exactly
+    k = sup.shape[0]
+    flat = np.unique(np.asarray(sup.reshape(k, -1)[:, 0]))
+    assert len(flat) == k
+    lp = d.log_prob(sup)
+    assert bool(jnp.all(jnp.isfinite(lp)))
+
+
+@pytest.mark.enum
+def test_enumerate_support_values_golden():
+    np.testing.assert_array_equal(
+        np.asarray(dist.Bernoulli(probs=0.7).enumerate_support()), [0, 1])
+    np.testing.assert_array_equal(
+        np.asarray(dist.DiscreteUniform(-1, 2).enumerate_support()),
+        [-1, 0, 1, 2])
+    np.testing.assert_array_equal(
+        np.asarray(dist.Categorical(logits=jnp.zeros(3)).enumerate_support()),
+        [0, 1, 2])
+
+
+@pytest.mark.enum
+def test_expanded_discrete_keeps_enumerate_support():
+    d = dist.Bernoulli(probs=0.3).expand((5,))
+    assert d.has_enumerate_support
+    assert d.enumerate_support(expand=False).shape == (2, 1)
+    assert d.enumerate_support(expand=True).shape == (2, 5)
+    assert not dist.Normal(0.0, 1.0).has_enumerate_support
+    with pytest.raises(NotImplementedError, match="enumerate_support"):
+        dist.Normal(0.0, 1.0).enumerate_support()

@@ -508,3 +508,285 @@ def test_predictive_output_roundtrips_into_log_likelihood():
     assert "w2" in draws
     ll = log_likelihood(m, draws, x, y=jnp.zeros(4))
     assert ll["y"].shape == (5, 4)
+
+
+# ---------------------------------------------------------------------------
+# enumeration x {jit, vmap, grad, scan, plate, mask, scale, reparam}
+# (docs/enumeration.md composition matrix; each test pins one cell)
+# ---------------------------------------------------------------------------
+
+_EK = 3
+_EW = jnp.array([0.2, 0.5, 0.3])
+_EX = random.normal(random.PRNGKey(0), (6,)) * 2.0
+
+
+def _enum_gmm(x):
+    mu = pc.sample("mu", dist.Normal(jnp.zeros(_EK), jnp.ones(_EK)).to_event(1))
+    with pc.plate("data", x.shape[0]):
+        z = pc.sample("z", dist.Categorical(probs=_EW),
+                      infer={"enumerate": "parallel"})
+        pc.sample("obs", dist.Normal(mu[z], 1.0), obs=x)
+
+
+def _enum_gmm_brute(mus, x, weights=_EW, scale_factor=1.0, mask_arr=None):
+    prior = dist.Normal(jnp.zeros(_EK), jnp.ones(_EK)).log_prob(mus).sum()
+    lp_z = jnp.log(weights)[None, :]
+    lp_obs = dist.Normal(mus[None, :], 1.0).log_prob(x[:, None])
+    per_point = jax.nn.logsumexp(scale_factor * (lp_z + lp_obs), axis=-1)
+    if mask_arr is not None:
+        per_point = jnp.where(mask_arr, per_point, 0.0)
+    return prior + per_point.sum()
+
+
+def test_enum_jit_compiles_once():
+    calls = {"n": 0}
+
+    def model(x):
+        calls["n"] += 1
+        _enum_gmm(x)
+
+    f = jax.jit(lambda mu: log_density(model, (_EX,), {}, {"mu": mu})[0])
+    mus = jnp.array([-2.0, 0.0, 2.0])
+    a = f(mus)
+    b = f(mus + 1.0)
+    assert calls["n"] > 0
+    n_after_first = calls["n"]
+    f(mus + 2.0)
+    assert calls["n"] == n_after_first  # no retrace for new values
+    assert abs(float(a) - float(_enum_gmm_brute(mus, _EX))) < 1e-5
+    assert abs(float(b) - float(_enum_gmm_brute(mus + 1.0, _EX))) < 1e-5
+
+
+def test_enum_vmap_over_params():
+    mus_batch = jnp.stack([jnp.array([-2.0, 0.0, 2.0]),
+                           jnp.array([-1.0, 0.5, 1.0])])
+    lps = jax.vmap(
+        lambda mu: log_density(_enum_gmm, (_EX,), {}, {"mu": mu})[0]
+    )(mus_batch)
+    for i in range(2):
+        assert abs(float(lps[i])
+                   - float(_enum_gmm_brute(mus_batch[i], _EX))) < 1e-5
+
+
+def test_enum_grad_matches_brute_force_grad():
+    mus = jnp.array([-2.0, 0.0, 2.0])
+    g_enum = jax.grad(
+        lambda mu: log_density(_enum_gmm, (_EX,), {}, {"mu": mu})[0])(mus)
+    g_brute = jax.grad(lambda mu: _enum_gmm_brute(mu, _EX))(mus)
+    assert jnp.allclose(g_enum, g_brute, atol=1e-5)
+
+
+def test_enum_scan_markov_under_jit_and_grad():
+    from repro.core.infer import markov
+
+    k, v = 3, 4
+    th = dist.Dirichlet(jnp.full((k, k), 2.0)).sample(
+        rng_key=random.PRNGKey(1))
+    ph = dist.Dirichlet(jnp.full((k, v), 1.0)).sample(
+        rng_key=random.PRNGKey(2))
+    w = random.randint(random.PRNGKey(3), (12,), 0, v)
+
+    def model(w):
+        theta = pc.sample(
+            "theta", dist.Dirichlet(jnp.full((k, k), 2.0)).to_event(1))
+        phi = pc.sample(
+            "phi", dist.Dirichlet(jnp.full((k, v), 1.0)).to_event(1))
+
+        def step(z_prev, w_t):
+            z = pc.sample("z", dist.Categorical(probs=theta[z_prev]))
+            pc.sample("w", dist.Categorical(probs=phi[z]), obs=w_t)
+            return z
+
+        markov(step, 0, w)
+
+    f = jax.jit(jax.value_and_grad(
+        lambda t: log_density(model, (w,), {}, {"theta": t, "phi": ph})[0]))
+    lp, g = f(th)
+    assert bool(jnp.isfinite(lp)) and bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_enum_respects_mask():
+    mask_arr = jnp.array([True, True, False, True, False, True])
+
+    def model(x):
+        mu = pc.sample("mu",
+                       dist.Normal(jnp.zeros(_EK), jnp.ones(_EK)).to_event(1))
+        with pc.plate("data", x.shape[0]):
+            with mask(mask=mask_arr):
+                z = pc.sample("z", dist.Categorical(probs=_EW),
+                              infer={"enumerate": "parallel"})
+                pc.sample("obs", dist.Normal(mu[z], 1.0), obs=x)
+
+    mus = jnp.array([-2.0, 0.0, 2.0])
+    lp, _ = log_density(model, (_EX,), {}, {"mu": mus})
+    # masked-out points drop out of the density entirely: the enumerated
+    # site's masked factor is the normalized -log K (not 0, which would
+    # leak +log K per point through the logsumexp)
+    expected = _enum_gmm_brute(mus, _EX, mask_arr=mask_arr)
+    assert abs(float(lp) - float(expected)) < 1e-5
+
+
+def test_enum_fully_masked_site_contributes_zero():
+    def model(m):
+        pc.sample("mu", dist.Normal(0.0, 1.0))
+        with pc.plate("data", 4):
+            with mask(mask=m):
+                z = pc.sample("z", dist.Bernoulli(probs=0.3),
+                              infer={"enumerate": "parallel"})
+                pc.sample("obs", dist.Normal(z.astype(jnp.float32), 1.0),
+                          obs=jnp.zeros(4))
+
+    lp_masked, _ = log_density(
+        lambda: model(jnp.zeros(4, bool)), (), {}, {"mu": jnp.array(0.2)})
+    only_mu = float(dist.Normal(0.0, 1.0).log_prob(0.2))
+    assert abs(float(lp_masked) - only_mu) < 1e-6
+
+
+def test_log_likelihood_enum_model_requires_pinned_discrete():
+    from repro.core.infer import infer_discrete, log_likelihood
+
+    samples = {"mu": jnp.stack([jnp.array([-2.0, 0.0, 2.0]),
+                                jnp.array([-1.0, 0.0, 1.0])])}
+    with pytest.raises(NotImplementedError, match="infer_discrete"):
+        log_likelihood(_enum_gmm, samples, _EX)
+
+    # pinned with infer_discrete draws it works
+    keys = random.split(random.PRNGKey(0), 2)
+    zs = jax.vmap(lambda d, k: infer_discrete(
+        substitute(_enum_gmm, data=d), k)(_EX)["z"])(samples, keys)
+    ll = log_likelihood(_enum_gmm, {**samples, "z": zs}, _EX)
+    assert ll["obs"].shape == (2, _EX.shape[0])
+    assert bool(jnp.all(jnp.isfinite(ll["obs"])))
+
+
+def test_enum_respects_scale():
+    s = 0.25
+
+    def model(x):
+        mu = pc.sample("mu",
+                       dist.Normal(jnp.zeros(_EK), jnp.ones(_EK)).to_event(1))
+        with pc.plate("data", x.shape[0]):
+            with scale(scale=s):
+                z = pc.sample("z", dist.Categorical(probs=_EW),
+                              infer={"enumerate": "parallel"})
+                pc.sample("obs", dist.Normal(mu[z], 1.0), obs=x)
+
+    mus = jnp.array([-2.0, 0.0, 2.0])
+    lp, _ = log_density(model, (_EX,), {}, {"mu": mus})
+    # scale applies to the per-site factors *before* contraction (tempered
+    # marginalization, matching NumPyro's enum semantics)
+    expected = _enum_gmm_brute(mus, _EX, scale_factor=s)
+    assert abs(float(lp) - float(expected)) < 1e-5
+
+
+def test_enum_scale_outside_markov_scales_marginal():
+    from repro.core.infer import config_enumerate, markov
+
+    k, v = 2, 3
+    th = dist.Dirichlet(jnp.full((k, k), 2.0)).sample(
+        rng_key=random.PRNGKey(4))
+    ph = dist.Dirichlet(jnp.full((k, v), 1.0)).sample(
+        rng_key=random.PRNGKey(5))
+    w = random.randint(random.PRNGKey(6), (5,), 0, v)
+
+    def chain(w):
+        def step(z_prev, w_t):
+            z = pc.sample("z", dist.Categorical(probs=th[z_prev]))
+            pc.sample("w", dist.Categorical(probs=ph[z]), obs=w_t)
+            return z
+        markov(step, 0, w)
+
+    lp1, _ = log_density(config_enumerate(chain), (w,), {}, {})
+    lp2, _ = log_density(scale(config_enumerate(chain), scale=3.0),
+                         (w,), {}, {})
+    assert abs(float(lp2) - 3.0 * float(lp1)) < 1e-5
+
+
+def test_enum_composes_with_reparam():
+    from repro.core.handlers import reparam
+    from repro.core.reparam import LocScaleReparam
+
+    def model(x):
+        loc = pc.sample("loc", dist.Normal(0.0, 3.0))
+        mu = pc.sample("mu", dist.Normal(loc, 1.0))
+        with pc.plate("data", x.shape[0]):
+            z = pc.sample("z", dist.Bernoulli(probs=0.3),
+                          infer={"enumerate": "parallel"})
+            pc.sample("obs",
+                      dist.Normal(jnp.where(z == 1, mu, -mu), 1.0), obs=x)
+
+    rep = reparam(model, config={"mu": LocScaleReparam(0.0)})
+    lp, tr = log_density(rep, (_EX,), {},
+                         {"loc": jnp.array(0.5),
+                          "mu_decentered": jnp.array(0.2)})
+    assert bool(jnp.isfinite(lp))
+    assert tr["mu"]["type"] == "deterministic"  # reparam rewired the site
+    assert tr["z"]["infer"]["_enumerate_dim"] is not None
+
+
+def test_enum_continuous_site_raises():
+    def model():
+        pc.sample("x", dist.Normal(0.0, 1.0),
+                  infer={"enumerate": "parallel"})
+
+    with pytest.raises(ValueError, match="no enumerate_support"):
+        log_density(model, (), {}, {})
+
+
+def test_substitute_enumerated_site_raises():
+    from repro.core.infer import enum as enum_handler
+
+    def model():
+        pc.sample("z", dist.Bernoulli(probs=0.3),
+                  infer={"enumerate": "parallel"})
+
+    h = enum_handler(model, first_available_dim=-1)
+    with pytest.raises(ValueError, match="being enumerated"):
+        trace(substitute(h, data={"z": jnp.array(1)})).get_trace()
+    # ... and through log_density's own substitution of params
+    with pytest.raises(ValueError, match="being enumerated"):
+        log_density(model, (), {}, {"z": jnp.array(1)})
+
+
+def test_condition_enumerated_site_raises():
+    from repro.core.handlers import do
+    from repro.core.infer import enum as enum_handler
+
+    def model():
+        pc.sample("z", dist.Bernoulli(probs=0.3),
+                  infer={"enumerate": "parallel"})
+
+    with pytest.raises(ValueError, match="being enumerated"):
+        trace(condition(enum_handler(model, first_available_dim=-1),
+                        data={"z": jnp.array(1)})).get_trace()
+    with pytest.raises(ValueError, match="being enumerated"):
+        trace(do(enum_handler(model, first_available_dim=-1),
+                 data={"z": jnp.array(1)})).get_trace()
+
+
+def test_condition_inside_enum_is_fine():
+    """Conditioning *before* enumeration observes the site; the enum handler
+    then (correctly) leaves it alone."""
+    def model():
+        pc.sample("loc", dist.Normal(0.0, 1.0))
+        pc.sample("z", dist.Bernoulli(probs=0.3),
+                  infer={"enumerate": "parallel"})
+
+    lp, tr = log_density(condition(model, data={"z": jnp.array(1)}), (), {},
+                         {"loc": jnp.array(0.0)})
+    assert tr["z"]["is_observed"]
+    expected = (dist.Normal(0.0, 1.0).log_prob(0.0)
+                + dist.Bernoulli(probs=0.3).log_prob(1))
+    assert abs(float(lp) - float(expected)) < 1e-6
+
+
+def test_enum_plate_dim_collision_raises():
+    from repro.core.infer import enum as enum_handler
+
+    def model():
+        with pc.plate("p", 4, dim=-2):
+            pc.sample("z", dist.Bernoulli(probs=0.3),
+                      infer={"enumerate": "parallel"})
+
+    with pytest.raises(ValueError, match="collides with the enumeration"):
+        trace(enum_handler(model, first_available_dim=-2)).get_trace()

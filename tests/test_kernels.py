@@ -258,3 +258,61 @@ def test_mla_absorbed_decode_matches_expanded():
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     exp = ref.decode_attention(q, k, v, mask, scale=scale)
     assert float(jnp.max(jnp.abs(out - exp))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# enum_contract: logsumexp chain-elimination kernel vs ref oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.enum
+@pytest.mark.parametrize("batch,Ki,K", [
+    ((), 2, 2), ((), 3, 3), ((), 16, 16), ((), 128, 128), ((), 7, 13),
+    ((), 257, 5), ((4,), 8, 8), ((2, 3), 5, 5),
+])
+def test_enum_contract_bit_parity(batch, Ki, K):
+    from repro.kernels.enum_contract import enum_contract
+    ks = random.split(random.PRNGKey(0), 2)
+    a = random.normal(ks[0], batch + (Ki,))
+    m = random.normal(ks[1], batch + (Ki, K))
+    out = enum_contract(a, m, interpret=True)
+    exp = ref.enum_contract(a, m)
+    assert out.shape == exp.shape == batch + (K,)
+    assert jnp.array_equal(out, exp), "kernel must be bit-identical to ref"
+
+
+@pytest.mark.enum
+def test_enum_contract_masked_columns_and_rows():
+    from repro.kernels.enum_contract import enum_contract
+    a = jnp.array([0.3, -jnp.inf, 1.2])
+    m = random.normal(random.PRNGKey(1), (3, 4)).at[:, 2].set(-jnp.inf)
+    out = enum_contract(a, m, interpret=True)
+    exp = ref.enum_contract(a, m)
+    assert jnp.array_equal(out, exp)
+    assert bool(jnp.isneginf(out[2]))  # fully-masked column pins to -inf
+    # matches a plain stabilized logsumexp on the finite columns
+    lse = jax.nn.logsumexp(a[:, None] + m, axis=0)
+    finite = jnp.isfinite(lse)
+    assert jnp.allclose(out[finite], lse[finite], atol=1e-6)
+
+
+@pytest.mark.enum
+def test_enum_contract_ref_is_correct_and_differentiable():
+    a = random.normal(random.PRNGKey(2), (6,))
+    m = random.normal(random.PRNGKey(3), (6, 9))
+    exp = jax.nn.logsumexp(a[:, None] + m, axis=0)
+    assert jnp.allclose(ref.enum_contract(a, m), exp, atol=1e-6)
+    g = jax.grad(lambda aa: ref.enum_contract(aa, m).sum())(a)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # softmax-weight structure of the gradient: rows sum to #columns
+    assert abs(float(g.sum()) - m.shape[1]) < 1e-4
+
+
+@pytest.mark.enum
+def test_enum_contract_ops_dispatch():
+    from repro.kernels import ops
+    a = random.normal(random.PRNGKey(4), (5,))
+    m = random.normal(random.PRNGKey(5), (5, 5))
+    base = ops.enum_contract(a, m)  # default: ref path
+    with ops.use_pallas(True, interpret=True):
+        fused = ops.enum_contract(a, m)
+    assert jnp.array_equal(base, fused)
