@@ -29,9 +29,12 @@ def _previous_headlines():
                        for m in ("ms_per_leapfrog", "ms_per_eff_sample",
                                  "wall_s")
                        if m in prev[k]}
-    for k in ("multichain", "svi_minibatch", "enum_hmm"):
+    for k in ("multichain", "svi_minibatch", "enum_hmm", "chees"):
         if isinstance(prev.get(k), dict):
             keep[k] = {"rows": prev[k].get("rows")}
+            if "ess_per_sec_ratio_at_max_chains" in prev[k]:
+                keep[k]["ess_per_sec_ratio_at_max_chains"] = \
+                    prev[k]["ess_per_sec_ratio_at_max_chains"]
     return keep or None
 
 
@@ -42,7 +45,7 @@ def main():
     out = {}
     previous = _previous_headlines()
 
-    from benchmarks import (enum_hmm, hmm, logreg, multichain, skim,
+    from benchmarks import (chees, enum_hmm, hmm, logreg, multichain, skim,
                             svi_minibatch)
     print("=" * 70)
     print("Table 2a — HMM (time per leapfrog step)")
@@ -64,6 +67,11 @@ def main():
     print("Multi-chain throughput (chains × samples/sec, vmap executor)")
     print("=" * 70, flush=True)
     out["multichain"] = multichain.main(quick=quick)
+
+    print("=" * 70)
+    print("ChEES-HMC vs NUTS (samples/sec + ESS/sec vs chain count)")
+    print("=" * 70, flush=True)
+    out["chees"] = chees.main(quick=quick)
 
     print("=" * 70)
     print("Minibatch SVI (steps/sec vs subsample size, one compiled step)")

@@ -6,6 +6,12 @@ from .diagnostics import (
     print_summary,
     summary,
 )
+from .ensemble import (
+    ChEES,
+    ChEESState,
+    chees_init,
+    chees_setup,
+)
 from .enum import (
     config_enumerate,
     contract_enum_factors,
@@ -41,6 +47,7 @@ __all__ = [
     "HMC", "NUTS", "HMCState", "MCMC", "SVI", "SVIState", "Trace_ELBO",
     "KernelSetup", "SamplerKernel", "init_state", "sample",
     "hmc_setup", "hmc_init", "nuts_setup", "nuts_init",
+    "ChEES", "ChEESState", "chees_setup", "chees_init",
     "config_enumerate", "contract_enum_factors", "enum", "infer_discrete",
     "markov",
     "AutoNormal", "Predictive", "log_density", "log_likelihood",

@@ -36,7 +36,9 @@ from .hmc_util import (
     velocity_verlet,
     welford_covariance,
     welford_init,
+    welford_pool,
     welford_update,
+    window_predicates,
 )
 from .kernel_api import KernelSetup
 from .util import (
@@ -112,26 +114,19 @@ def _make_init_fn(potential_fn, dim, num_warmup, *, z_fixed, adapt_step_size,
 
 def _make_sample_fn(potential_fn, num_warmup, schedule, *, algo,
                     trajectory_length, adapt_step_size, adapt_mass_matrix,
-                    dense_mass, target_accept_prob, max_tree_depth):
+                    dense_mass, target_accept_prob, max_tree_depth,
+                    pooled_mass=False):
     """Pure transition ``HMCState -> HMCState`` with every static ingredient
-    (closures, schedule tables) captured here, never read off an object."""
-    # window tables for jittable schedule lookups
-    window_starts = jnp.asarray([s for (s, _) in schedule] or [0], jnp.int32)
-    window_ends = jnp.asarray([e for (_, e) in schedule] or [0], jnp.int32)
-    has_middle = len(schedule) > 2
-    is_middle = jnp.asarray(
-        [1 if 0 < i < len(schedule) - 1 else 0
-         for i in range(len(schedule))] or [0], jnp.int32).astype(bool)
+    (closures, schedule tables) captured here, never read off an object.
 
-    def in_middle_window(t):
-        if not has_middle:
-            return jnp.zeros((), bool)
-        return ((t >= window_starts) & (t <= window_ends) & is_middle).any()
-
-    def window_end_is_middle(t):
-        if not has_middle:
-            return jnp.zeros((), bool)
-        return ((t == window_ends) & is_middle).any()
+    ``pooled_mass=True`` defers the mass-matrix refresh: the per-chain
+    Welford accumulator still collects draws inside middle windows and dual
+    averaging still restarts at window ends, but the inverse mass matrix is
+    left untouched (and the accumulator is not reset) so a batch-aware
+    wrapper can pool the accumulators *across* chains at the window boundary
+    — see :func:`hmc_setup` with ``cross_chain_adapt=True``.
+    """
+    in_middle_window, window_end_is_middle = window_predicates(schedule)
 
     def adapt_update(state: HMCState, accept_prob) -> AdaptState:
         adapt = state.adapt_state
@@ -144,6 +139,12 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, algo,
         else:
             da, step_size = adapt.da_state, adapt.step_size
         if not adapt_mass_matrix:
+            if adapt_step_size:
+                # same end-of-warmup freeze as the mass-adapting path:
+                # sampling runs on the averaged DA iterate, not the last
+                # noisy update
+                step_size = jnp.where(t == (num_warmup - 1),
+                                      jnp.exp(da.x_avg), step_size)
             return AdaptState(step_size, adapt.inverse_mass_matrix, da,
                               adapt.welford, adapt.window_idx)
         # 2) welford accumulation inside middle windows
@@ -156,8 +157,15 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, algo,
         at_end = window_end_is_middle(t)
 
         def refresh(_):
-            imm = welford_covariance(wf)
-            wf_new = welford_init(state.z.shape[0], diagonal=not dense_mass)
+            if pooled_mass:
+                # cross-chain mode: the batch wrapper pools the per-chain
+                # accumulators and swaps in the shared estimate right after
+                # this step; here only dual averaging restarts
+                imm, wf_new = adapt.inverse_mass_matrix, wf
+            else:
+                imm = welford_covariance(wf)
+                wf_new = welford_init(state.z.shape[0],
+                                      diagonal=not dense_mass)
             if adapt_step_size:
                 ss = jnp.exp(da.x_avg)
                 da_new = dual_averaging_init(jnp.log(ss))
@@ -254,20 +262,13 @@ def _collect_fn(state: HMCState):
     }
 
 
-def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
-              init_params=None, model_args=(), model_kwargs=None,
-              algo="HMC", step_size=1.0, trajectory_length=2 * jnp.pi,
-              adapt_step_size=True, adapt_mass_matrix=True, dense_mass=False,
-              target_accept_prob=0.8, max_tree_depth=10,
-              init_strategy="uniform") -> KernelSetup:
-    """Build the static :class:`KernelSetup` for HMC (``algo="HMC"``) or
-    NUTS (``algo="NUTS"``).
-
-    This is the only impure-ish step (it traces ``model`` once to discover
-    latent sites); everything it returns is a pure closure over the results.
-    ``rng_key`` only seeds the structure-discovery trace — per-chain
-    randomness comes from the key passed to ``init_fn``.
-    """
+def flat_model_ingredients(rng_key, *, model=None, potential_fn=None,
+                           init_params=None, model_args=(),
+                           model_kwargs=None):
+    """One-time Python-level work shared by every gradient-based kernel:
+    trace the model (or accept a raw ``potential_fn``) and return
+    ``(potential_flat, unravel, constrain, transforms, dim, z_fixed)``
+    operating on the flat unconstrained vector."""
     model_kwargs = model_kwargs or {}
     transforms = None
     if model is not None:
@@ -289,6 +290,39 @@ def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
         z_fixed, unravel = ravel_pytree(init_params)
         potential_flat, constrain = potential_fn, unravel
         dim = z_fixed.shape[0]
+    return potential_flat, unravel, constrain, transforms, dim, z_fixed
+
+
+def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
+              init_params=None, model_args=(), model_kwargs=None,
+              algo="HMC", step_size=1.0, trajectory_length=2 * jnp.pi,
+              adapt_step_size=True, adapt_mass_matrix=True, dense_mass=False,
+              target_accept_prob=0.8, max_tree_depth=10,
+              init_strategy="uniform",
+              cross_chain_adapt=False) -> KernelSetup:
+    """Build the static :class:`KernelSetup` for HMC (``algo="HMC"``) or
+    NUTS (``algo="NUTS"``).
+
+    This is the only impure-ish step (it traces ``model`` once to discover
+    latent sites); everything it returns is a pure closure over the results.
+    ``rng_key`` only seeds the structure-discovery trace — per-chain
+    randomness comes from the key passed to ``init_fn``.
+
+    ``cross_chain_adapt=True`` opts the warmup into the batch-aware kernel
+    contract (``KernelSetup.cross_chain``): the transition itself stays
+    per-chain (vmapped inside the returned ``sample_fn``), but at every
+    middle-window boundary the per-chain Welford accumulators are pooled
+    (:func:`~repro.core.infer.hmc_util.welford_pool`) and the resulting
+    shared mass-matrix estimate — C chains × window draws instead of one
+    chain's worth — is broadcast back into every chain.  Step-size dual
+    averaging remains per-chain.
+    """
+    model_kwargs = model_kwargs or {}
+    (potential_flat, unravel, constrain, transforms, dim,
+     z_fixed) = flat_model_ingredients(
+        rng_key, model=model, potential_fn=potential_fn,
+        init_params=init_params, model_args=model_args,
+        model_kwargs=model_kwargs)
 
     schedule = build_adaptation_schedule(num_warmup)
     init_fn = _make_init_fn(
@@ -302,12 +336,58 @@ def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
         trajectory_length=trajectory_length, adapt_step_size=adapt_step_size,
         adapt_mass_matrix=adapt_mass_matrix, dense_mass=dense_mass,
         target_accept_prob=target_accept_prob,
-        max_tree_depth=max_tree_depth)
+        max_tree_depth=max_tree_depth,
+        pooled_mass=cross_chain_adapt and adapt_mass_matrix)
+    if cross_chain_adapt:
+        init_fn, sample_fn = _cross_chain_wrap(
+            init_fn, sample_fn, schedule, num_warmup,
+            pool_mass=adapt_mass_matrix)
     return KernelSetup(
         init_fn=init_fn, sample_fn=sample_fn, collect_fn=_collect_fn,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo=algo,
-        adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule))
+        adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
+        cross_chain=cross_chain_adapt)
+
+
+def _cross_chain_wrap(chain_init_fn, chain_sample_fn, schedule, num_warmup,
+                      *, pool_mass):
+    """Lift a per-chain HMC/NUTS kernel to the batch-aware contract with
+    pooled cross-chain mass adaptation.
+
+    The wrapped ``sample_fn`` runs the vmapped per-chain transition (whose
+    ``pooled_mass=True`` adaptation accumulates but never refreshes), then —
+    at middle-window ends, detectable outside the vmap because every chain
+    shares the same iteration counter — pools the per-chain Welford states,
+    broadcasts the shared covariance into each chain's inverse mass matrix,
+    and resets the accumulators.
+    """
+    _, window_end_is_middle = window_predicates(schedule)
+
+    def init_fn(keys):
+        return jax.vmap(chain_init_fn)(keys)
+
+    def sample_fn(states: HMCState) -> HMCState:
+        states = jax.vmap(chain_sample_fn)(states)
+        if not pool_mass:
+            return states
+        # iteration just completed (i was incremented by the transition)
+        t = states.i[0] - 1
+        at_end = window_end_is_middle(t) & (t < num_warmup)
+
+        def refresh(states):
+            adapt = states.adapt_state
+            pooled = welford_pool(adapt.welford)
+            imm = welford_covariance(pooled)
+            num_chains = states.i.shape[0]
+            imm_b = jnp.broadcast_to(imm, (num_chains,) + imm.shape)
+            wf_reset = jax.tree_util.tree_map(jnp.zeros_like, adapt.welford)
+            return states._replace(adapt_state=adapt._replace(
+                inverse_mass_matrix=imm_b, welford=wf_reset))
+
+        return lax.cond(at_end, refresh, lambda s: s, states)
+
+    return init_fn, sample_fn
 
 
 def nuts_setup(rng_key, num_warmup, **kwargs) -> KernelSetup:
@@ -344,7 +424,8 @@ class HMC:
     def __init__(self, model=None, potential_fn=None, step_size=1.0,
                  trajectory_length=2 * jnp.pi, adapt_step_size=True,
                  adapt_mass_matrix=True, dense_mass=False,
-                 target_accept_prob=0.8, init_strategy="uniform"):
+                 target_accept_prob=0.8, init_strategy="uniform",
+                 cross_chain_adapt=False):
         self.model = model
         self.potential_fn = potential_fn
         self._step_size = step_size
@@ -354,6 +435,7 @@ class HMC:
         self._dense_mass = dense_mass
         self._target = target_accept_prob
         self._init_strategy = init_strategy
+        self._cross_chain_adapt = cross_chain_adapt
         self._algo = "HMC"
         self._max_tree_depth = 10
         self._setup: Optional[KernelSetup] = None
@@ -374,7 +456,8 @@ class HMC:
             dense_mass=self._dense_mass,
             target_accept_prob=self._target,
             max_tree_depth=self._max_tree_depth,
-            init_strategy=self._init_strategy)
+            init_strategy=self._init_strategy,
+            cross_chain_adapt=self._cross_chain_adapt)
 
     # -- legacy API ----------------------------------------------------------
     def init(self, rng_key, num_warmup, init_params=None, model_args=(),
@@ -413,12 +496,14 @@ class NUTS(HMC):
     def __init__(self, model=None, potential_fn=None, step_size=1.0,
                  adapt_step_size=True, adapt_mass_matrix=True,
                  dense_mass=False, target_accept_prob=0.8,
-                 max_tree_depth=10, init_strategy="uniform"):
+                 max_tree_depth=10, init_strategy="uniform",
+                 cross_chain_adapt=False):
         super().__init__(model=model, potential_fn=potential_fn,
                          step_size=step_size, adapt_step_size=adapt_step_size,
                          adapt_mass_matrix=adapt_mass_matrix,
                          dense_mass=dense_mass,
                          target_accept_prob=target_accept_prob,
-                         init_strategy=init_strategy)
+                         init_strategy=init_strategy,
+                         cross_chain_adapt=cross_chain_adapt)
         self._algo = "NUTS"
         self._max_tree_depth = max_tree_depth

@@ -140,6 +140,97 @@ def welford_update(state: WelfordState, x):
     return WelfordState(mean, m2, n)
 
 
+def chain_sum(x):
+    """Bit-deterministic sum over the leading (chain) axis.
+
+    ``jnp.sum`` over an axis that ``chain_method="parallel"`` shards across
+    devices lowers to per-shard partial sums plus an all-reduce — a
+    *different floating-point association* than the single-device row sum,
+    so pooled cross-chain statistics would drift between chain methods.
+    This fixed pairwise-tree fold bakes the association into the graph
+    (slices + elementwise adds only), making the result bit-identical for
+    every device layout.  Chain counts are small, so the O(log C) fold is
+    noise next to the leapfrog work it summarizes.
+    """
+    while x.shape[0] > 1:
+        n = x.shape[0]
+        half = n // 2
+        folded = x[:half] + x[half:2 * half]
+        if n % 2:
+            folded = jnp.concatenate([folded, x[2 * half:]], axis=0)
+        x = folded
+    return x[0]
+
+
+def chain_mean(x):
+    """Bit-deterministic mean over the leading (chain) axis."""
+    return chain_sum(x) / x.shape[0]
+
+
+def welford_combine(a: WelfordState, b: WelfordState) -> WelfordState:
+    """Exact merge of two Welford accumulators (Chan et al. 1979).
+
+    Either side may be empty (``n == 0``).
+    """
+    n_a = a.n.astype(a.mean.dtype)
+    n_b = b.n.astype(b.mean.dtype)
+    n = n_a + n_b
+    n_safe = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (n_b / n_safe)
+    if a.m2.ndim == a.mean.ndim:          # diagonal accumulator
+        cross = delta * delta
+    else:                                  # dense accumulator
+        cross = jnp.outer(delta, delta)
+    m2 = a.m2 + b.m2 + cross * (n_a * n_b / n_safe)
+    return WelfordState(mean, m2, a.n + b.n)
+
+
+def welford_batch(x, diagonal=True) -> WelfordState:
+    """Welford accumulator equivalent to folding in every row of ``x``
+    (shape ``(batch, dim)``) — one vectorized pass, no per-row loop.
+
+    Combined with :func:`welford_combine` this pools a whole chain-batch of
+    draws into a shared cross-chain estimator in O(dim) reductions per
+    iteration.  Reductions over the batch axis use :func:`chain_sum`, so the
+    estimate is bit-identical whether the axis is sharded or not.
+    """
+    n = x.shape[0]
+    mean = chain_mean(x)
+    centered = x - mean
+    if diagonal:
+        m2 = chain_sum(centered * centered)
+    else:
+        m2 = chain_sum(centered[:, :, None] * centered[:, None, :])
+    return WelfordState(mean, m2, jnp.asarray(n, jnp.int32))
+
+
+def welford_pool(states: WelfordState) -> WelfordState:
+    """Pool a chain-batch of Welford accumulators (leaves lead with the
+    chain axis) into one: the exact accumulator that would result from
+    folding every chain's draws into a single estimator.
+
+    This is the cross-chain mass-matrix pooling step: C chains × n draws
+    each become one (C·n)-draw estimate, so warmup variance shrinks with the
+    chain count instead of each chain re-learning the scale alone.  All
+    chain-axis reductions go through :func:`chain_sum` so the pooled
+    estimate is bit-identical between ``chain_method="vectorized"`` and
+    ``"parallel"``.
+    """
+    n_c = states.n.astype(states.mean.dtype)            # (C,)
+    n = chain_sum(n_c)
+    n_safe = jnp.maximum(n, 1.0)
+    nb = n_c.reshape((-1,) + (1,) * (states.mean.ndim - 1))
+    mean = chain_sum(nb * states.mean) / n_safe
+    delta = states.mean - mean                          # (C, dim)
+    if states.m2.ndim == states.mean.ndim:              # diagonal
+        m2 = chain_sum(states.m2) + chain_sum(nb * delta * delta)
+    else:                                               # dense
+        m2 = chain_sum(states.m2) + chain_sum(
+            n_c[:, None, None] * delta[:, :, None] * delta[:, None, :])
+    return WelfordState(mean, m2, chain_sum(states.n))
+
+
 def welford_covariance(state: WelfordState, regularize=True):
     mean, m2, n = state
     nf = jnp.maximum(n, 2).astype(m2.dtype)
@@ -229,6 +320,34 @@ def build_adaptation_schedule(num_steps):
         schedule.append((start, end))
     schedule.append((num_steps - term_buffer, num_steps - 1))
     return schedule
+
+
+def window_predicates(schedule):
+    """Jittable predicates over a Stan-style window schedule.
+
+    Returns ``(in_middle_window, window_end_is_middle)``: scalar-int ->
+    scalar-bool closures over static window tables, shared by the per-chain
+    HMC/NUTS adaptation and the cross-chain ensemble kernels so both agree
+    on exactly which warmup iterations accumulate / refresh the mass matrix.
+    """
+    window_starts = jnp.asarray([s for (s, _) in schedule] or [0], jnp.int32)
+    window_ends = jnp.asarray([e for (_, e) in schedule] or [0], jnp.int32)
+    has_middle = len(schedule) > 2
+    is_middle = jnp.asarray(
+        [1 if 0 < i < len(schedule) - 1 else 0
+         for i in range(len(schedule))] or [0], jnp.int32).astype(bool)
+
+    def in_middle_window(t):
+        if not has_middle:
+            return jnp.zeros((), bool)
+        return ((t >= window_starts) & (t <= window_ends) & is_middle).any()
+
+    def window_end_is_middle(t):
+        if not has_middle:
+            return jnp.zeros((), bool)
+        return ((t == window_ends) & is_middle).any()
+
+    return in_middle_window, window_end_is_middle
 
 
 # ---------------------------------------------------------------------------

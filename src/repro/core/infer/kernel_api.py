@@ -23,6 +23,23 @@ Contract
     one setup can drive any number of vmapped/sharded/scanned chains and
     re-running it from the same state reproduces draws bit-for-bit.
 
+Per-chain vs batch-aware kernels
+--------------------------------
+The default contract is *per-chain*: ``init_fn`` takes one key, ``sample_fn``
+one chain state, and the executor supplies the batching (``vmap`` over a
+leading ``(chains,)`` axis).  A kernel that sets ``cross_chain=True`` opts
+into the *batch-aware* contract instead: its ``init_fn`` receives the full
+``(num_chains, ...)`` key array and its ``sample_fn``/``collect_fn`` map the
+whole ensemble state (per-chain leaves carry a leading chain axis; pooled
+adaptation state is shared, unbatched) — the executor then drives it without
+the outer ``vmap``, so the kernel can reduce *across* the chain axis
+(pooled Welford mass estimates, cross-chain dual averaging, ChEES trajectory
+adaptation — see :mod:`repro.core.infer.ensemble`).  Under
+``chain_method="parallel"`` those reductions become all-reduces over the
+``chains`` mesh axis; everything else (chunked ``lax.scan``,
+checkpoint/resume) is unchanged because the ensemble state is still one
+explicit pytree.
+
 The class-based :class:`~repro.core.infer.hmc.HMC` / ``NUTS`` API survives
 as a thin wrapper over these functions (see ``docs/inference.md`` for the
 migration note).
@@ -49,8 +66,14 @@ class KernelSetup(NamedTuple):
     unravel_fn: Callable       # flat (D,) -> latent pytree (unconstrained)
     constrain_fn: Callable     # flat (D,) -> latent pytree (constrained)
     num_warmup: int
-    algo: str                  # e.g. "HMC" | "NUTS"
+    algo: str                  # e.g. "HMC" | "NUTS" | "ChEES"
     adapt_schedule: Tuple[Tuple[int, int], ...]  # Stan-style (start, end)
+    # batch-aware contract: when True, init_fn takes the full (num_chains,)
+    # key array and sample_fn/collect_fn operate on the whole ensemble state
+    # (per-chain leaves lead with the chain axis, pooled adaptation state is
+    # shared) — the executor skips its outer vmap so the kernel may reduce
+    # across chains.  Per-chain kernels leave the default False.
+    cross_chain: bool = False
 
 
 def init_state(setup: KernelSetup, rng_key):

@@ -12,6 +12,15 @@ Chains are always a batch: ``init_fn``/``sample_fn`` from the kernel's
 - ``sequential`` — the same compiled batch-size-1 program invoked per
   chain (bounded memory), results stacked host-side.
 
+Batch-aware kernels (``KernelSetup.cross_chain``, e.g. the ChEES-HMC
+ensemble in :mod:`repro.core.infer.ensemble`) skip the executor's outer
+``vmap``: their ``sample_fn`` maps the whole ensemble state, so cross-chain
+reductions (pooled mass matrices, ensemble step-size adaptation) live
+inside the kernel and become all-reduces over the ``chains`` mesh under
+``chain_method="parallel"``.  Chunking, sharding and checkpoint/resume are
+identical — ensemble adaptation state is just one more pytree in the
+checkpoint.
+
 Fault tolerance: ``run(..., checkpoint_every=k, checkpoint_dir=d)`` persists
 the full chain state (``d/state``, overwritten) plus each completed chunk of
 collected draws (``d/samples_<start>_<end>``, written once — total I/O stays
@@ -77,6 +86,8 @@ class MCMC:
         if chain_method not in ("vectorized", "sequential", "parallel"):
             raise ValueError(f"unknown chain_method {chain_method}")
         self.chain_method = chain_method
+        self.progress = bool(progress)
+        self._divergences = 0   # cumulative, reported by progress lines
         self.collect_fields = collect_fields
         self._samples = None
         self._collected = None
@@ -91,27 +102,53 @@ class MCMC:
 
     # -- compiled chunk programs ----------------------------------------------
     def _exec(self, kind, setup: KernelSetup, length=None):
+        """Compiled chunk program for ``setup``.
+
+        Per-chain kernels get the executor's batching (``vmap`` over the
+        leading chain axis); batch-aware kernels (``setup.cross_chain``) are
+        driven whole — their ``sample_fn`` already maps the full ensemble
+        state, so the chunk is a plain ``lax.scan`` and cross-chain
+        reductions inside the kernel stay visible to XLA (they become
+        all-reduces under ``chain_method="parallel"``).  Collected draws come
+        out as ``(chains, draws, ...)`` either way.
+        """
         key = (kind, setup, length)
         fn = self._exec_cache.get(key)
         if fn is not None:
             return fn
         if kind == "init":
-            fn = jax.jit(lambda keys: jax.vmap(setup.init_fn)(keys))
+            if setup.cross_chain:
+                fn = jax.jit(setup.init_fn)
+            else:
+                fn = jax.jit(lambda keys: jax.vmap(setup.init_fn)(keys))
         elif kind == "warmup":
-            def one_warm(state):
+            def warm_scan(state):
                 return lax.scan(lambda s, _: (setup.sample_fn(s), None),
                                 state, None, length=length)[0]
 
-            fn = jax.jit(lambda states: jax.vmap(one_warm)(states))
+            if setup.cross_chain:
+                fn = jax.jit(warm_scan)
+            else:
+                fn = jax.jit(lambda states: jax.vmap(warm_scan)(states))
         elif kind == "sample":
             def body(s, _):
                 s = setup.sample_fn(s)
                 return s, setup.collect_fn(s)
 
-            def one_sample(state):
-                return lax.scan(body, state, None, length=length)
+            if setup.cross_chain:
+                def whole(state):
+                    state, out = lax.scan(body, state, None, length=length)
+                    # scan stacks draws leftmost; put the chain axis first
+                    out = jax.tree_util.tree_map(
+                        lambda x: jnp.swapaxes(x, 0, 1), out)
+                    return state, out
 
-            fn = jax.jit(lambda states: jax.vmap(one_sample)(states))
+                fn = jax.jit(whole)
+            else:
+                def one_sample(state):
+                    return lax.scan(body, state, None, length=length)
+
+                fn = jax.jit(lambda states: jax.vmap(one_sample)(states))
         else:
             raise ValueError(kind)
         self._exec_cache[key] = fn
@@ -147,6 +184,22 @@ class MCMC:
                              **make_mesh_axis_kwargs(1))
         from jax.sharding import NamedSharding, PartitionSpec
         return NamedSharding(mesh, PartitionSpec("chains"))
+
+    def _shard_tree(self, tree):
+        """Device-put a state/collected pytree for ``chain_method="parallel"``:
+        leaves with a leading chain axis are sharded over the ``chains`` mesh,
+        everything else (shared ensemble adaptation state, counters, the
+        shared rng key of a cross-chain kernel) is replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        sharding = self._chains_sharding()
+        replicated = NamedSharding(sharding.mesh, PartitionSpec())
+
+        def put(x):
+            if getattr(x, "ndim", 0) >= 1 and x.shape[0] == self.num_chains:
+                return jax.device_put(x, sharding)
+            return jax.device_put(x, replicated)
+
+        return jax.tree_util.tree_map(put, tree)
 
     # -- checkpoint/resume ----------------------------------------------------
     # Layout under checkpoint_dir:
@@ -201,8 +254,9 @@ class MCMC:
                     f"{field}={extra.get(field)}, this MCMC has "
                     f"{getattr(self, field)}")
 
-        state_skel = jax.eval_shape(
-            lambda k: jax.vmap(setup.init_fn)(k), keys)
+        # abstract-trace the same compiled programs the executor runs, so
+        # the skeleton matches per-chain and cross-chain kernels alike
+        state_skel = jax.eval_shape(self._exec("init", setup), keys)
         tree, _, _ = ckpt.restore({"chain_state": state_skel}, state_dir)
         states = tree["chain_state"]
 
@@ -225,15 +279,8 @@ class MCMC:
             if skel is None:
                 # abstract-trace the chunk once per distinct length (at most
                 # two: full chunk + remainder), not once per chunk dir
-                def chunk_skel(states_skel, length=length):
-                    def body(s, _):
-                        s = setup.sample_fn(s)
-                        return s, setup.collect_fn(s)
-
-                    return jax.vmap(lambda s: lax.scan(
-                        body, s, None, length=length)[1])(states_skel)
-
-                skel = jax.eval_shape(chunk_skel, state_skel)
+                skel = jax.eval_shape(self._exec("sample", setup, length),
+                                      state_skel)[1]
                 skel_cache[length] = skel
             part, _, _ = ckpt.restore(
                 skel, os.path.join(directory, f"samples_{start:06d}_{end:06d}"))
@@ -266,11 +313,27 @@ class MCMC:
                 collected = out if collected is None else _tree_concat(
                     [collected, out])
             done += n
+            if self.progress:
+                self._progress_line(done, total, out)
             if checkpoint_dir is not None:
                 self._save_checkpoint(
                     checkpoint_dir, states, done, chunk=out,
                     chunk_range=(done - n, done) if out is not None else None)
         return states, collected
+
+    def _progress_line(self, done, total, out):
+        """Host-side progress report, once per completed compiled chunk.
+
+        Runs after the chunk's device work: the ``int(...)`` on the chunk's
+        divergence count is the only sync, and a checkpointing run pays an
+        equivalent one anyway.  Never touches the sample stream.
+        """
+        if out is not None and "diverging" in out:
+            self._divergences += int(jnp.sum(out["diverging"]))
+        phase = "warmup" if done <= self.num_warmup else "sample"
+        print(f"[MCMC] {done}/{total} iterations ({phase}) | "
+              f"chains: {self.num_chains} | "
+              f"divergences: {self._divergences}", flush=True)
 
     # -- public API ----------------------------------------------------------
     def run(self, rng_key, *model_args, init_params=None,
@@ -282,7 +345,13 @@ class MCMC:
         setup = self._get_setup(rng_key, init_params, model_args,
                                 model_kwargs)
         keys = random.split(rng_key, self.num_chains)
+        self._divergences = 0
 
+        if setup.cross_chain and self.chain_method == "sequential":
+            raise ValueError(
+                f"kernel {setup.algo!r} adapts across the chain batch; "
+                "chain_method='sequential' would run each chain alone — "
+                "use 'vectorized' or 'parallel'")
         if self.chain_method == "sequential":
             if checkpoint_every or checkpoint_dir:
                 raise ValueError(
@@ -307,13 +376,15 @@ class MCMC:
                                                     keys)
             if restored is not None:
                 states, collected, done = restored
+                if (self.progress and collected is not None
+                        and "diverging" in collected):
+                    # keep the cumulative progress counter honest across a
+                    # resume: recount the restored chunks' divergences
+                    self._divergences = int(jnp.sum(collected["diverging"]))
                 if self.chain_method == "parallel":
-                    sharding = self._chains_sharding()
-                    states = jax.tree_util.tree_map(
-                        lambda x: jax.device_put(x, sharding), states)
+                    states = self._shard_tree(states)
                     if collected is not None:
-                        collected = jax.tree_util.tree_map(
-                            lambda x: jax.device_put(x, sharding), collected)
+                        collected = self._shard_tree(collected)
             else:
                 states, collected, done = (
                     self._exec("init", setup)(keys), None, 0)

@@ -1,0 +1,107 @@
+"""Golden tests for the MCMC diagnostics the ensemble acceptance criteria
+lean on: effective sample size against closed-form autocorrelation times and
+split Gelman-Rubin against known-mixed / known-broken chain sets."""
+import numpy as np
+
+from repro.core.infer import effective_sample_size, gelman_rubin
+
+
+def _ar1(rng, rho, c, n):
+    """AR(1) chains with unit stationary variance: x_t = rho x_{t-1} + e."""
+    x = np.empty((c, n))
+    innov = rng.normal(size=(c, n)) * np.sqrt(1.0 - rho**2)
+    x[:, 0] = rng.normal(size=c)
+    for t in range(1, n):
+        x[:, t] = rho * x[:, t - 1] + innov[:, t]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# effective sample size
+# ---------------------------------------------------------------------------
+
+
+def test_ess_white_noise_approx_total_draws():
+    """Independent draws: ESS ~= c * n (Geyer truncation costs a little)."""
+    rng = np.random.default_rng(0)
+    c, n = 4, 4000
+    x = rng.normal(size=(c, n))
+    ess = float(effective_sample_size(x))
+    assert 0.75 * c * n < ess < 1.25 * c * n, ess
+
+
+def test_ess_ar1_matches_closed_form_tau():
+    """AR(1) has tau = (1 + rho) / (1 - rho) exactly; the estimator must
+    land near c*n/tau for both a moderate and a sticky chain."""
+    rng = np.random.default_rng(1)
+    c, n = 4, 20000
+    for rho in (0.5, 0.9):
+        x = _ar1(rng, rho, c, n)
+        tau = (1 + rho) / (1 - rho)
+        expected = c * n / tau
+        ess = float(effective_sample_size(x))
+        assert 0.7 * expected < ess < 1.35 * expected, (rho, ess, expected)
+
+
+def test_ess_ordering_more_correlation_less_ess():
+    rng = np.random.default_rng(2)
+    c, n = 2, 8000
+    ess = [float(effective_sample_size(_ar1(rng, rho, c, n)))
+           for rho in (0.0, 0.5, 0.9)]
+    assert ess[0] > ess[1] > ess[2], ess
+
+
+def test_ess_single_chain_1d_input():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=5000)           # 1-D input: one chain
+    ess = float(effective_sample_size(x))
+    assert 0.7 * 5000 < ess < 1.3 * 5000, ess
+
+
+# ---------------------------------------------------------------------------
+# split Gelman-Rubin
+# ---------------------------------------------------------------------------
+
+
+def test_rhat_identical_distribution_near_one():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(4, 2000))
+    r = float(gelman_rubin(x))
+    assert 0.99 < r < 1.02, r
+
+
+def test_rhat_flags_shifted_mean_chains():
+    """Chains stuck in different modes must be flagged loudly."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(4, 1000))
+    x[0] += 3.0                          # one chain 3 sigma off
+    assert float(gelman_rubin(x)) > 1.2
+    x = rng.normal(size=(2, 1000))
+    x[1] += 10.0
+    assert float(gelman_rubin(x)) > 3.0
+
+
+def test_rhat_is_split_catches_within_chain_drift():
+    """A trending chain looks fine to unsplit R-hat (both chains share the
+    trend) but the split statistic compares first and second halves."""
+    rng = np.random.default_rng(6)
+    n = 2000
+    trend = np.linspace(-2.0, 2.0, n)
+    x = rng.normal(size=(2, n)) * 0.3 + trend
+    assert float(gelman_rubin(x)) > 1.5
+
+
+def test_rhat_expected_values_golden():
+    """Closed-form check: for chains N(m_i, 1), split R-hat estimates
+    sqrt(1 + n*var(m_i)/W / n) — verify against the analytic value."""
+    rng = np.random.default_rng(7)
+    n = 50000
+    shifts = np.array([-0.5, 0.5])
+    x = rng.normal(size=(2, n)) + shifts[:, None]
+    # four split chains with means approx [-.5, -.5, .5, .5], W ~= 1
+    m = np.array([-0.5, 0.5, -0.5, 0.5])
+    half = n // 2
+    B_over_n = np.var(m, ddof=1)        # per-draw between-chain variance
+    expected = np.sqrt((half - 1) / half + B_over_n)
+    got = float(gelman_rubin(x))
+    assert abs(got - expected) < 0.02, (got, expected)

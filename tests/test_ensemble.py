@@ -1,0 +1,360 @@
+"""Cross-chain ensemble inference: ChEES-HMC and pooled NUTS adaptation.
+
+Covers the batch-aware kernel contract end to end: posterior correctness
+against NUTS on the paper's models, bit-identical pooled warmup statistics
+between ``chain_method="vectorized"`` and ``"parallel"`` (run under the
+multi-device CI job with 4 virtual devices; trivially true on one device),
+checkpoint/resume bit-identity through the ensemble adaptation state, and
+the pooling primitives against numpy oracles.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.handlers import reparam
+from repro.core.infer import (ChEES, MCMC, NUTS, chees_setup,
+                              effective_sample_size, gelman_rubin)
+from repro.core.infer.hmc_util import (
+    WelfordState,
+    chain_mean,
+    chain_sum,
+    welford_batch,
+    welford_combine,
+    welford_init,
+    welford_pool,
+    welford_update,
+)
+from repro.core.reparam import LocScaleReparam
+
+# ---------------------------------------------------------------------------
+# pooling primitives vs numpy oracles
+# ---------------------------------------------------------------------------
+
+
+def test_chain_sum_matches_numpy_any_count():
+    rng = np.random.default_rng(0)
+    for c in (1, 2, 3, 7, 8):
+        x = jnp.asarray(rng.normal(size=(c, 5)).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(chain_sum(x)),
+                                   np.asarray(x).sum(0), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(chain_mean(x)),
+                                   np.asarray(x).mean(0), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_welford_batch_equals_sequential_updates():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(6, 4)).astype(np.float32))
+    seq = welford_init(4)
+    for row in x:
+        seq = welford_update(seq, row)
+    batch = welford_batch(x)
+    assert int(batch.n) == int(seq.n) == 6
+    np.testing.assert_allclose(np.asarray(batch.mean), np.asarray(seq.mean),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(batch.m2), np.asarray(seq.m2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_welford_combine_and_pool_match_flat_estimator():
+    """Pooling C per-chain accumulators == one accumulator over all draws."""
+    rng = np.random.default_rng(2)
+    draws = rng.normal(size=(3, 10, 4)).astype(np.float32)  # (C, n, D)
+    per_chain = jax.vmap(welford_batch)(jnp.asarray(draws))
+    pooled = welford_pool(per_chain)
+    flat = welford_batch(jnp.asarray(draws.reshape(-1, 4)))
+    assert int(pooled.n) == int(flat.n) == 30
+    np.testing.assert_allclose(np.asarray(pooled.mean), np.asarray(flat.mean),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(pooled.m2), np.asarray(flat.m2),
+                               rtol=1e-4, atol=1e-4)
+    # two-way combine agrees with the numpy moment oracle
+    a = welford_batch(jnp.asarray(draws[0]))
+    b = welford_batch(jnp.asarray(draws[1]))
+    ab = welford_combine(a, b)
+    both = draws[:2].reshape(-1, 4)
+    np.testing.assert_allclose(np.asarray(ab.mean), both.mean(0), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ab.m2),
+                               ((both - both.mean(0)) ** 2).sum(0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_welford_pool_dense_matches_numpy_cov():
+    rng = np.random.default_rng(3)
+    draws = rng.normal(size=(4, 25, 3)).astype(np.float32)
+    per_chain = jax.vmap(lambda x: welford_batch(x, diagonal=False))(
+        jnp.asarray(draws))
+    pooled = welford_pool(per_chain)
+    flat = draws.astype(np.float64).reshape(-1, 3)
+    np.testing.assert_allclose(np.asarray(pooled.m2),
+                               (flat - flat.mean(0)).T @ (flat - flat.mean(0)),
+                               rtol=2e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ChEES posterior correctness
+# ---------------------------------------------------------------------------
+
+
+def test_chees_conjugate_normal():
+    def model():
+        pc.sample("x", dist.Normal(1.0, 2.0))
+
+    mcmc = MCMC(ChEES(model), num_warmup=300, num_samples=300, num_chains=8)
+    mcmc.run(random.PRNGKey(0))
+    x = mcmc.get_samples(group_by_chain=True)["x"]
+    assert x.shape == (8, 300)
+    assert abs(float(x.mean()) - 1.0) < 0.15
+    assert abs(float(x.std()) - 2.0) < 0.2
+    assert float(gelman_rubin(x)) < 1.01
+    assert float(effective_sample_size(x)) > 400
+
+
+def _eight_schools_noncentered():
+    y = jnp.array([28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0])
+    sigma = jnp.array([15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0])
+
+    def eight_schools():
+        mu = pc.sample("mu", dist.Normal(0.0, 5.0))
+        tau = pc.sample("tau", dist.HalfCauchy(5.0))
+        with pc.plate("J", 8):
+            theta = pc.sample("theta", dist.Normal(mu, tau))
+            pc.sample("obs", dist.Normal(theta, sigma), obs=y)
+
+    return reparam(eight_schools, config={"theta": LocScaleReparam(0.0)})
+
+
+def _max_split_rhat(samples_by_chain):
+    worst = 0.0
+    for v in samples_by_chain.values():
+        v = np.asarray(v)
+        flat = v.reshape(v.shape[0], v.shape[1], -1)
+        for i in range(flat.shape[-1]):
+            worst = max(worst, float(gelman_rubin(flat[..., i])))
+    return worst
+
+
+def test_chees_matches_nuts_eight_schools():
+    """Acceptance: ChEES on non-centered eight schools matches the NUTS
+    posterior means within MC error, with split R-hat < 1.01."""
+    model = _eight_schools_noncentered()
+    results = {}
+    for name, kernel in [("nuts", NUTS(model)), ("chees", ChEES(model))]:
+        mcmc = MCMC(kernel, num_warmup=500, num_samples=500, num_chains=8)
+        mcmc.run(random.PRNGKey(0))
+        results[name] = mcmc.get_samples(group_by_chain=True)
+        assert _max_split_rhat(results[name]) < 1.01, name
+    for site in ("mu", "tau"):
+        a = float(np.asarray(results["nuts"][site]).mean())
+        b = float(np.asarray(results["chees"][site]).mean())
+        # MC error of the posterior-mean estimate at these ESS is ~0.1-0.2
+        assert abs(a - b) < 0.5, (site, a, b)
+
+
+def test_chees_matches_nuts_logreg():
+    rng = np.random.default_rng(0)
+    n, d = 400, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    true_beta = np.array([1.0, -0.5, 0.25, 0.0], np.float32)
+    p = 1.0 / (1.0 + np.exp(-(x @ true_beta)))
+    y = jnp.asarray((rng.random(n) < p).astype(np.float32))
+    x = jnp.asarray(x)
+
+    def model(x, y):
+        beta = pc.sample("beta",
+                         dist.Normal(jnp.zeros(d), jnp.ones(d)).to_event(1))
+        with pc.plate("N", n):
+            pc.sample("obs", dist.Bernoulli(logits=x @ beta), obs=y)
+
+    results = {}
+    for name, kernel in [("nuts", NUTS(model)), ("chees", ChEES(model))]:
+        mcmc = MCMC(kernel, num_warmup=400, num_samples=400, num_chains=8)
+        mcmc.run(random.PRNGKey(1), x, y)
+        samples = mcmc.get_samples(group_by_chain=True)
+        assert _max_split_rhat(samples) < 1.01, name
+        results[name] = np.asarray(samples["beta"]).reshape(-1, d).mean(0)
+    np.testing.assert_allclose(results["nuts"], results["chees"], atol=0.12)
+
+
+def test_nuts_cross_chain_adapt_matches_posterior():
+    """Pooled-mass NUTS warmup is a drop-in: same posterior, valid draws."""
+    sigma0, sigma = 2.0, 1.0
+    y = jnp.asarray(np.random.default_rng(0).normal(1.8, sigma, size=50))
+
+    def model(y):
+        mu = pc.sample("mu", dist.Normal(0.0, sigma0))
+        with pc.plate("N", y.shape[0]):
+            pc.sample("obs", dist.Normal(mu, sigma), obs=y)
+
+    post_var = 1.0 / (1 / sigma0**2 + len(y) / sigma**2)
+    post_mean = post_var * (float(y.sum()) / sigma**2)
+    mcmc = MCMC(NUTS(model, cross_chain_adapt=True), num_warmup=300,
+                num_samples=400, num_chains=4)
+    mcmc.run(random.PRNGKey(0), y)
+    mu = mcmc.get_samples()["mu"]
+    assert abs(float(mu.mean()) - post_mean) < 0.1
+    assert abs(float(mu.var()) - post_var) < 0.05
+    grouped = mcmc.get_samples(group_by_chain=True)["mu"]
+    assert float(gelman_rubin(grouped)) < 1.05
+    # every chain shares one pooled mass matrix after warmup
+    imm = np.asarray(mcmc.last_state.adapt_state.inverse_mass_matrix)
+    assert imm.shape[0] == 4
+    assert np.all(imm == imm[0])
+
+
+# ---------------------------------------------------------------------------
+# lockstep + executor contract
+# ---------------------------------------------------------------------------
+
+
+def _scalar_model():
+    def model():
+        pc.sample("x", dist.Normal(1.0, 2.0))
+        pc.sample("s", dist.HalfNormal(1.0))
+
+    return model
+
+
+def test_chees_trajectories_are_lockstep():
+    """Every chain reports the identical leapfrog count at every draw —
+    the whole point of the fixed-length ensemble regime."""
+    mcmc = MCMC(ChEES(_scalar_model()), num_warmup=100, num_samples=50,
+                num_chains=8)
+    mcmc.run(random.PRNGKey(0))
+    steps = np.asarray(mcmc.get_extra_fields(group_by_chain=True)["num_steps"])
+    assert steps.shape == (8, 50)
+    assert np.all(steps == steps[:1, :]), "chains disagree on leapfrog count"
+    # Halton jitter actually varies the trajectory across draws
+    assert len(np.unique(steps[0])) > 1 or steps.max() == 1
+
+
+def test_chees_setup_purity_two_runs_bitwise():
+    """One setup, two runs from the same keys: bitwise equal draws."""
+    setup = chees_setup(random.PRNGKey(0), 50, model=_scalar_model())
+    keys = random.split(random.PRNGKey(7), 4)
+    runs = []
+    for _ in range(2):
+        state = setup.init_fn(keys)
+        step = jax.jit(setup.sample_fn)
+        zs = []
+        for _ in range(60):
+            state = step(state)
+            zs.append(np.asarray(state.z))
+        runs.append(np.stack(zs))
+    np.testing.assert_array_equal(runs[0], runs[1])
+
+
+def test_chees_sequential_raises():
+    mcmc = MCMC(ChEES(_scalar_model()), num_warmup=10, num_samples=10,
+                num_chains=2, chain_method="sequential")
+    with pytest.raises(ValueError, match="sequential"):
+        mcmc.run(random.PRNGKey(0))
+
+
+def test_chees_thinning_and_extra_fields_aligned():
+    mcmc = MCMC(ChEES(_scalar_model()), num_warmup=50, num_samples=40,
+                num_chains=2, thinning=4)
+    mcmc.run(random.PRNGKey(0))
+    x = mcmc.get_samples(group_by_chain=True)["x"]
+    extra = mcmc.get_extra_fields(group_by_chain=True)
+    assert x.shape == (2, 10)
+    for name in ("accept_prob", "diverging", "num_steps", "step_size",
+                 "trajectory_length"):
+        assert extra[name].shape == (2, 10), name
+
+
+# ---------------------------------------------------------------------------
+# vectorized vs parallel parity (bit-identical pooled statistics)
+# ---------------------------------------------------------------------------
+
+
+def _run_both_methods(kernel_factory, num_chains=8):
+    out = {}
+    for method in ("vectorized", "parallel"):
+        mcmc = MCMC(kernel_factory(), num_warmup=100, num_samples=50,
+                    num_chains=num_chains, chain_method=method)
+        mcmc.run(random.PRNGKey(3))
+        out[method] = (
+            np.asarray(mcmc.get_samples(group_by_chain=True)["x"]),
+            np.asarray(mcmc.last_state.adapt_state.inverse_mass_matrix))
+    return out
+
+
+def test_chees_vectorized_parallel_bit_identical():
+    """Acceptance: the warmup pooled mass estimate (and with it the entire
+    sample stream) is bit-identical between chain methods.  Real coverage
+    comes from the multi-device CI job (4 virtual devices); on one device
+    the sharded program still runs the same code path."""
+    res = _run_both_methods(lambda: ChEES(_scalar_model()))
+    np.testing.assert_array_equal(res["vectorized"][1], res["parallel"][1])
+    np.testing.assert_array_equal(res["vectorized"][0], res["parallel"][0])
+
+
+def test_nuts_cross_chain_vectorized_parallel_bit_identical():
+    res = _run_both_methods(
+        lambda: NUTS(_scalar_model(), cross_chain_adapt=True))
+    np.testing.assert_array_equal(res["vectorized"][1], res["parallel"][1])
+    np.testing.assert_array_equal(res["vectorized"][0], res["parallel"][0])
+
+
+def test_chees_parallel_uses_all_devices():
+    n_dev = len(jax.devices())
+    mcmc = MCMC(ChEES(_scalar_model()), num_warmup=20, num_samples=20,
+                num_chains=8, chain_method="parallel")
+    mcmc.run(random.PRNGKey(0))
+    used = {d.id for d in mcmc.last_state.z.sharding.device_set}
+    assert len(used) == min(n_dev, 8)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume through the ensemble adaptation state
+# ---------------------------------------------------------------------------
+
+
+def test_chees_checkpoint_resume_mid_warmup_bit_identical(tmp_path):
+    """Acceptance: kill mid-warmup (ensemble adaptation state lives only in
+    the checkpoint pytree), resume, and finish bit-identically."""
+    from repro.distributed import checkpoint as ckpt
+
+    def make():
+        return MCMC(ChEES(_scalar_model()), num_warmup=60, num_samples=80,
+                    num_chains=4)
+
+    ref = make()
+    ref.run(random.PRNGKey(9))
+    expected = np.asarray(ref.get_samples(group_by_chain=True)["x"])
+
+    ckdir = str(tmp_path / "chees")
+    real_save, calls = ckpt.save, {"n": 0}
+
+    def killing_save(tree, directory, **kw):
+        real_save(tree, directory, **kw)
+        calls["n"] += 1
+        if calls["n"] == 2:   # state at iteration 50 — still in warmup
+            raise KeyboardInterrupt
+
+    ckpt.save = killing_save
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            make().run(random.PRNGKey(9), checkpoint_every=25,
+                       checkpoint_dir=ckdir)
+    finally:
+        ckpt.save = real_save
+
+    step = ckpt.latest_step(os.path.join(ckdir, "state"))
+    assert step is not None and step < 60, step   # mid-warmup
+
+    resumed = make()
+    resumed.run(random.PRNGKey(9), checkpoint_every=25, checkpoint_dir=ckdir,
+                resume=True)
+    got = np.asarray(resumed.get_samples(group_by_chain=True)["x"])
+    np.testing.assert_array_equal(got, expected)

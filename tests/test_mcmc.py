@@ -211,3 +211,37 @@ def test_dense_mass_beats_diag_on_correlated_gaussian():
         flat = mcmc.get_samples()["x"]
         assert abs(float(flat.mean())) < 0.2
     assert ess[True] > 1.5 * ess[False], ess
+
+
+def test_progress_fires_once_per_chunk_without_changing_samples(capsys):
+    """MCMC(progress=True) reports once per compiled chunk (step count +
+    cumulative divergences) and never perturbs the sample stream."""
+    def model():
+        pc.sample("x", dist.Normal(0.0, 1.0))
+
+    def make(progress):
+        return MCMC(NUTS(model), num_warmup=40, num_samples=60, num_chains=2,
+                    progress=progress)
+
+    ref = make(False)
+    ref.run(random.PRNGKey(2))
+    expected = np.asarray(ref.get_samples(group_by_chain=True)["x"])
+    capsys.readouterr()
+
+    prog = make(True)
+    # chunks: warmup 25+15, sampling 25+25+10 -> 5 progress lines
+    prog.run(random.PRNGKey(2), checkpoint_every=25)
+    lines = [ln for ln in capsys.readouterr().out.splitlines()
+             if ln.startswith("[MCMC]")]
+    assert len(lines) == 5, lines
+    assert "100/100" in lines[-1] and "divergences" in lines[-1]
+    assert "(warmup)" in lines[0] and "(sample)" in lines[-1]
+    np.testing.assert_array_equal(
+        np.asarray(prog.get_samples(group_by_chain=True)["x"]), expected)
+
+    # an unchunked run still has two compiled chunks (warmup, sampling)
+    one = make(True)
+    one.run(random.PRNGKey(2))
+    lines = [ln for ln in capsys.readouterr().out.splitlines()
+             if ln.startswith("[MCMC]")]
+    assert len(lines) == 2, lines
