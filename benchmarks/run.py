@@ -38,6 +38,24 @@ def _previous_headlines():
     return keep or None
 
 
+def _lint_bench():
+    """Static-analysis overhead on the logreg model: the full lint pass is
+    pure tracing (zero FLOPs), so its wall time is the entire cost a user
+    pays for ``MCMC(..., validate=True)`` — once, on the cold path."""
+    from benchmarks.models import covtype_data, logreg_model
+    from repro.lint import lint_model
+
+    data = covtype_data(n=5000)
+    t0 = time.time()
+    result = lint_model(logreg_model, (data["x"],), {"y": data["y"]})
+    lint_ms = (time.time() - t0) * 1e3
+    rec = {"benchmark": "lint_logreg", "n": 5000, "lint_ms": lint_ms,
+           "ok": result.ok, "codes": sorted(result.codes())}
+    print(f"lint_model(logreg, n=5000): {lint_ms:.1f} ms, "
+          f"ok={result.ok}", flush=True)
+    return rec
+
+
 def main():
     quick = "--quick" in sys.argv or os.environ.get("BENCH_QUICK") == "1"
     os.makedirs(RESULTS, exist_ok=True)
@@ -82,6 +100,11 @@ def main():
     print("Fig 2b — SKIM time per effective sample vs p")
     print("=" * 70, flush=True)
     out["skim"] = skim.main(quick=quick)
+
+    print("=" * 70)
+    print("Static analyzer — lint_ms on logreg (cost of validate=True)")
+    print("=" * 70, flush=True)
+    out["lint"] = _lint_bench()
 
     print("=" * 70)
     print("Roofline (from dry-run artifacts; see EXPERIMENTS.md)")

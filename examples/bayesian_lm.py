@@ -10,11 +10,11 @@ priors over its weights, three ways:
 """
 import jax
 import jax.numpy as jnp
-from jax import random, vmap
+from jax import random
 
 import repro.core as pc
 from repro.core import bayes, dist
-from repro.core.handlers import seed, substitute, trace
+from repro.core.handlers import seed, trace
 from repro.configs import get_config
 from repro.data import SyntheticLMData
 from repro.launch import steps as steps_mod

@@ -40,6 +40,18 @@ class Constraint:
     def __call__(self, x):
         raise NotImplementedError
 
+    def check(self, x):
+        """Alias for ``constraint(x)`` (the NumPyro/Pyro spelling); the
+        linter's RPL005 rule calls this on observed values."""
+        return self(x)
+
+    def feasible_like(self, prototype):
+        """A value inside the support with ``prototype``'s shape and dtype.
+        Used by the linter to certify a constraint's ``check`` works on
+        abstract values, and usable as a generic initialization point."""
+        raise NotImplementedError(
+            f"{self!r} does not define a feasible point")
+
     def __repr__(self):
         return self.__class__.__name__.lstrip("_")
 
@@ -48,6 +60,9 @@ class _Real(Constraint):
     def __call__(self, x):
         return jnp.isfinite(x)
 
+    def feasible_like(self, prototype):
+        return jnp.zeros_like(prototype)
+
 
 class _RealVector(Constraint):
     event_dim = 1
@@ -55,10 +70,16 @@ class _RealVector(Constraint):
     def __call__(self, x):
         return jnp.all(jnp.isfinite(x), axis=-1)
 
+    def feasible_like(self, prototype):
+        return jnp.zeros_like(prototype)
+
 
 class _Positive(Constraint):
     def __call__(self, x):
         return x > 0
+
+    def feasible_like(self, prototype):
+        return jnp.ones_like(prototype)
 
 
 class _PositiveVector(_Positive):
@@ -76,6 +97,10 @@ class _Interval(Constraint):
     def __call__(self, x):
         return (x >= self.lower_bound) & (x <= self.upper_bound)
 
+    def feasible_like(self, prototype):
+        mid = 0.5 * (self.lower_bound + self.upper_bound)
+        return jnp.full_like(prototype, mid)
+
     def __repr__(self):
         return f"interval(lower_bound={self.lower_bound}, upper_bound={self.upper_bound})"
 
@@ -89,6 +114,9 @@ class _Boolean(Constraint):
     def __call__(self, x):
         return (x == 0) | (x == 1)
 
+    def feasible_like(self, prototype):
+        return jnp.zeros_like(prototype)
+
 
 class _IntegerInterval(Constraint):
     def __init__(self, lower_bound, upper_bound):
@@ -98,12 +126,19 @@ class _IntegerInterval(Constraint):
     def __call__(self, x):
         return (x >= self.lower_bound) & (x <= self.upper_bound) & (x == jnp.floor(x))
 
+    def feasible_like(self, prototype):
+        return jnp.full_like(prototype, self.lower_bound)
+
 
 class _Simplex(Constraint):
     event_dim = 1
 
     def __call__(self, x):
         return jnp.all(x >= 0, axis=-1) & (jnp.abs(jnp.sum(x, axis=-1) - 1.0) < 1e-5)
+
+    def feasible_like(self, prototype):
+        k = jnp.shape(prototype)[-1]
+        return jnp.full_like(prototype, 1.0 / k)
 
 
 class _LowerCholesky(Constraint):
@@ -113,6 +148,11 @@ class _LowerCholesky(Constraint):
         tril = jnp.all(jnp.abs(jnp.triu(x, 1)) < 1e-6, axis=(-2, -1))
         pos_diag = jnp.all(jnp.diagonal(x, axis1=-2, axis2=-1) > 0, axis=-1)
         return tril & pos_diag
+
+    def feasible_like(self, prototype):
+        n = jnp.shape(prototype)[-1]
+        eye = jnp.eye(n, dtype=jnp.result_type(prototype))
+        return jnp.broadcast_to(eye, jnp.shape(prototype))
 
 
 # singleton instances (the usual spelling at call sites)

@@ -1,0 +1,77 @@
+"""Shared error hierarchy with stable rule codes.
+
+Every "loud error" the runtime raises for a model/handler defect carries a
+stable ``RPL###`` rule code, and the static analyzer (:mod:`repro.core.lint`)
+reports the *same* code for the same defect found at lint time — one
+vocabulary for both paths, so a message seen in a traceback can be looked up
+in ``docs/lint.md`` and reproduced with ``python -m repro.lint``.
+
+The classes multiply-inherit from the builtin exception the call sites
+historically raised (``ValueError``/``RuntimeError``/``NotImplementedError``)
+so existing ``except``/``pytest.raises`` clauses keep working; new code should
+catch :class:`ReproError` and dispatch on ``.code``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class ReproError(Exception):
+    """Base class for coded model/handler/inference errors.
+
+    ``code`` is a stable rule identifier (``"RPL007"``-style, see
+    ``repro.lint_rules.RULES``); ``site`` optionally names the offending
+    sample/param/plate site.  The code is prepended to the message
+    (``[RPL007] ...``) unless already present, so tracebacks are greppable.
+    """
+
+    code: Optional[str] = None
+
+    def __init__(self, message: str = "", *, code: Optional[str] = None,
+                 site: Optional[str] = None):
+        if code is not None:
+            self.code = code
+        self.site = site
+        if self.code and not str(message).startswith(f"[{self.code}]"):
+            message = f"[{self.code}] {message}"
+        super().__init__(message)
+
+
+class ReproValueError(ReproError, ValueError):
+    """Coded error for call sites that historically raised ValueError."""
+
+
+class ReproRuntimeError(ReproError, RuntimeError):
+    """Coded error for call sites that historically raised RuntimeError."""
+
+
+class ReproNotImplementedError(ReproError, NotImplementedError):
+    """Coded error for call sites that historically raised
+    NotImplementedError (structural limitations, not bugs)."""
+
+
+class ReproWarning(UserWarning):
+    """Coded warning twin: hazards the runtime tolerates (with a documented
+    fallback) but the linter reports.  The rule code is embedded in the
+    message text (warnings have no attribute transport through
+    ``warnings.warn``)."""
+
+
+def warning_code(warning_message: str) -> Optional[str]:
+    """Extract a leading ``[RPL###]`` code from a warning message."""
+    text = str(warning_message)
+    if text.startswith("[") and "]" in text:
+        code = text[1:text.index("]")]
+        if code.startswith("RPL"):
+            return code
+    return None
+
+
+__all__ = [
+    "ReproError",
+    "ReproValueError",
+    "ReproRuntimeError",
+    "ReproNotImplementedError",
+    "ReproWarning",
+    "warning_code",
+]

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from . import primitives
-from .primitives import apply_stack, stack
+from .errors import ReproRuntimeError, ReproValueError
+from .primitives import stack
 
 
 class Messenger:
@@ -80,7 +81,12 @@ class trace(Messenger):
         name = msg["name"]
         if msg["type"] in ("sample", "param", "deterministic", "plate"):
             if name in self._trace:
-                raise ValueError(f"duplicate site name '{name}' in trace")
+                raise ReproValueError(
+                    f"duplicate site name '{name}' in trace: every sample/"
+                    "param/deterministic/plate statement in one model "
+                    "execution needs a unique name (use `scope` for repeated "
+                    "sub-models, or index loop sites by iteration).",
+                    code="RPL001", site=name)
             self._trace[name] = msg.copy()
 
     def get_trace(self, *args, **kwargs) -> OrderedDict:
@@ -110,13 +116,16 @@ class replay(Messenger):
                 return  # observed here: the data, not the recording, wins
             guide_msg = self.guide_trace[name]
             if guide_msg["type"] != "sample":
-                raise RuntimeError(f"site {name} must be a sample site in the guide")
+                raise ReproRuntimeError(
+                    f"site {name} must be a sample site in the guide",
+                    code="RPL011", site=name)
             if guide_msg["is_observed"]:
                 # recorded as data but latent here: resampling silently would
                 # score a different execution than the recording
-                raise RuntimeError(
+                raise ReproRuntimeError(
                     f"site '{name}' was recorded as observed but is latent in "
-                    "the replayed model; condition the model on the same data")
+                    "the replayed model; condition the model on the same data",
+                    code="RPL011", site=name)
             msg["value"] = guide_msg["value"]
         elif msg["type"] == "plate" and name in self.guide_trace:
             guide_msg = self.guide_trace[name]
@@ -182,6 +191,20 @@ _ENUMERATED_SITE_ERR = (
     "infer={{'enumerate': 'parallel'}} mark.")
 
 
+def _check_unmatched(handler: str, data: Dict, seen: set) -> None:
+    """RPL006 runtime twin: a data key that matched no site is almost always a
+    typo'd name or a site the handler cannot see (blocked, or renamed by an
+    outer ``scope``)."""
+    missing = sorted(set(data) - seen)
+    if missing:
+        raise ReproValueError(
+            f"{handler} data key(s) {missing} matched no site in the model "
+            "execution: check the name(s) against trace(model).get_trace() "
+            "(sites under `scope` carry a 'prefix/' and blocked sites are "
+            "invisible to outer handlers).",
+            code="RPL006", site=missing[0])
+
+
 def _default_param_init(key, shape, dtype):
     if len(shape) == 0:
         return jnp.zeros(shape, dtype)
@@ -201,12 +224,26 @@ class substitute(Messenger):
     """
 
     def __init__(self, fn=None, data: Optional[Dict] = None,
-                 substitute_fn: Optional[Callable] = None):
+                 substitute_fn: Optional[Callable] = None,
+                 strict: bool = False):
         super().__init__(fn)
         if (data is None) == (substitute_fn is None):
             raise ValueError("substitute requires exactly one of data / substitute_fn")
+        if strict and data is None:
+            raise ValueError("substitute(strict=True) requires a data dict")
         self.data = data
         self.substitute_fn = substitute_fn
+        self.strict = strict
+        self._seen = set()
+
+    def __enter__(self):
+        self._seen = set()
+        return super().__enter__()
+
+    def __exit__(self, exc_type, exc_value, tb):
+        if exc_type is None and self.strict and self.data is not None:
+            _check_unmatched("substitute", self.data, self._seen)
+        return super().__exit__(exc_type, exc_value, tb)
 
     def process_message(self, msg: dict) -> None:
         if msg["type"] not in ("sample", "param", "plate", "deterministic"):
@@ -217,16 +254,19 @@ class substitute(Messenger):
             value = self.substitute_fn(msg)
         if value is None:
             return
+        self._seen.add(msg["name"])
         if msg["type"] == "deterministic":
             if msg["infer"].get("reparamed"):
                 # the value would be silently recomputed over our head
-                raise ValueError(_REPARAMED_SITE_ERR.format(
-                    handler="substitute", name=msg["name"]))
+                raise ReproValueError(_REPARAMED_SITE_ERR.format(
+                    handler="substitute", name=msg["name"]),
+                    code="RPL007", site=msg["name"])
             return  # ordinary deterministic: recomputed from the same
                     # substituted latents, so the injection is redundant
         if msg["infer"].get("_enumerate_dim") is not None:
-            raise ValueError(_ENUMERATED_SITE_ERR.format(
-                handler="substitute", name=msg["name"]))
+            raise ReproValueError(_ENUMERATED_SITE_ERR.format(
+                handler="substitute", name=msg["name"]),
+                code="RPL008", site=msg["name"])
         msg["value"] = value
 
 
@@ -239,19 +279,34 @@ class condition(Messenger):
     treating it as a random draw.
     """
 
-    def __init__(self, fn=None, data: Optional[Dict] = None):
+    def __init__(self, fn=None, data: Optional[Dict] = None,
+                 strict: bool = False):
         super().__init__(fn)
         self.data = data or {}
+        self.strict = strict
+        self._seen = set()
+
+    def __enter__(self):
+        self._seen = set()
+        return super().__enter__()
+
+    def __exit__(self, exc_type, exc_value, tb):
+        if exc_type is None and self.strict:
+            _check_unmatched("condition", self.data, self._seen)
+        return super().__exit__(exc_type, exc_value, tb)
 
     def process_message(self, msg: dict) -> None:
         if msg["type"] == "deterministic" and msg["name"] in self.data \
                 and msg["infer"].get("reparamed"):
-            raise ValueError(_REPARAMED_SITE_ERR.format(
-                handler="condition", name=msg["name"]))
+            raise ReproValueError(_REPARAMED_SITE_ERR.format(
+                handler="condition", name=msg["name"]),
+                code="RPL007", site=msg["name"])
         if msg["type"] == "sample" and msg["name"] in self.data:
             if msg["infer"].get("_enumerate_dim") is not None:
-                raise ValueError(_ENUMERATED_SITE_ERR.format(
-                    handler="condition", name=msg["name"]))
+                raise ReproValueError(_ENUMERATED_SITE_ERR.format(
+                    handler="condition", name=msg["name"]),
+                    code="RPL008", site=msg["name"])
+            self._seen.add(msg["name"])
             msg["value"] = self.data[msg["name"]]
             msg["is_observed"] = True
 
@@ -331,19 +386,34 @@ class do(Messenger):
     computation uses the clamped value.
     """
 
-    def __init__(self, fn=None, data: Optional[Dict] = None):
+    def __init__(self, fn=None, data: Optional[Dict] = None,
+                 strict: bool = False):
         super().__init__(fn)
         self.data = data or {}
+        self.strict = strict
+        self._seen = set()
+
+    def __enter__(self):
+        self._seen = set()
+        return super().__enter__()
+
+    def __exit__(self, exc_type, exc_value, tb):
+        if exc_type is None and self.strict:
+            _check_unmatched("do", self.data, self._seen)
+        return super().__exit__(exc_type, exc_value, tb)
 
     def process_message(self, msg: dict) -> None:
         if msg["type"] == "deterministic" and msg["name"] in self.data \
                 and msg["infer"].get("reparamed"):
-            raise ValueError(_REPARAMED_SITE_ERR.format(
-                handler="do", name=msg["name"]))
+            raise ReproValueError(_REPARAMED_SITE_ERR.format(
+                handler="do", name=msg["name"]),
+                code="RPL007", site=msg["name"])
         if msg["type"] == "sample" and msg["name"] in self.data:
             if msg["infer"].get("_enumerate_dim") is not None:
-                raise ValueError(_ENUMERATED_SITE_ERR.format(
-                    handler="do", name=msg["name"]))
+                raise ReproValueError(_ENUMERATED_SITE_ERR.format(
+                    handler="do", name=msg["name"]),
+                    code="RPL008", site=msg["name"])
+            self._seen.add(msg["name"])
             msg["value"] = self.data[msg["name"]]
             msg["stop"] = True
 

@@ -3,11 +3,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
 from .. import dist as _dist
-from ..dist.transforms import biject_to
-from ..handlers import block, seed, trace
 from ..primitives import param, sample
 from .util import get_model_transforms
 

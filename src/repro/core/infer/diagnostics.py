@@ -2,7 +2,6 @@
 split Gelman-Rubin R-hat, HPDI, and summary printing."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 

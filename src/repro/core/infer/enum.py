@@ -42,6 +42,7 @@ from jax import lax, random
 
 from .. import dist as _dist
 from .. import primitives
+from ..errors import ReproNotImplementedError, ReproValueError
 from ..handlers import Messenger, block, infer_config, scope, seed, trace
 from ..primitives import deterministic as _deterministic
 from ..primitives import plate as _plate
@@ -126,8 +127,9 @@ class _EnumProbe(Messenger):
                 and not msg["is_observed"] and msg["value"] is None):
             self.found = True
             if not getattr(fn, "has_enumerate_support", False):
-                raise ValueError(_NOT_ENUMERABLE_ERR.format(
-                    name=msg["name"], fn=type(fn).__name__))
+                raise ReproValueError(_NOT_ENUMERABLE_ERR.format(
+                    name=msg["name"], fn=type(fn).__name__),
+                    code="RPL013", site=msg["name"])
             msg["value"] = fn.enumerate_support(expand=False)[0]
             msg["infer"]["_enum_probe"] = True
 
@@ -221,19 +223,21 @@ class enum(Messenger):
                 f"'{msg['name']}' (only 'parallel' is supported)")
         fn = msg["fn"]
         if not getattr(fn, "has_enumerate_support", False):
-            raise ValueError(_NOT_ENUMERABLE_ERR.format(
-                name=msg["name"], fn=type(fn).__name__))
+            raise ReproValueError(_NOT_ENUMERABLE_ERR.format(
+                name=msg["name"], fn=type(fn).__name__),
+                code="RPL013", site=msg["name"])
         if tuple(msg["kwargs"].get("sample_shape") or ()) != ():
             raise NotImplementedError(
                 f"site '{msg['name']}': sample_shape does not compose with "
                 "enumeration; use a plate instead")
         for frame in msg["cond_indep_stack"]:
             if frame.dim <= self.first_available_dim:
-                raise ValueError(
+                raise ReproValueError(
                     f"plate '{frame.name}' occupies dim {frame.dim}, which "
                     f"collides with the enumeration dims (first_available_dim"
                     f"={self.first_available_dim}); pass a deeper "
-                    "first_available_dim / max_plate_nesting")
+                    "first_available_dim / max_plate_nesting",
+                    code="RPL003", site=frame.name)
         # batch dims reaching into the enumeration region are fine exactly
         # when they *are* enumeration dims (the site's parameters depend on
         # another enumerated value); anything else is a plate-budget bug
@@ -242,12 +246,13 @@ class enum(Messenger):
         batch_shape = tuple(fn.batch_shape)
         for d in range(-len(batch_shape), self.first_available_dim + 1):
             if batch_shape[d] != 1 and known.get(d) != batch_shape[d]:
-                raise ValueError(
+                raise ReproValueError(
                     f"site '{msg['name']}' has batch extent {batch_shape[d]} "
                     f"at dim {d}, inside the enumeration region "
                     f"(first_available_dim={self.first_available_dim}) but "
                     "matching no enumerated site — deepen "
-                    "first_available_dim / max_plate_nesting")
+                    "first_available_dim / max_plate_nesting",
+                    code="RPL003", site=msg["name"])
         support = fn.enumerate_support(expand=False)
         size = support.shape[0]
         dim = self.allocate(size, msg["name"])
@@ -443,9 +448,10 @@ def _find_enum_state():
 def _assert_no_active_plates(what: str) -> None:
     for handler in primitives.stack():
         if isinstance(handler, _plate) and handler._frame is not None:
-            raise NotImplementedError(
+            raise ReproNotImplementedError(
                 f"{what} inside an active plate is not supported; vmap the "
-                "whole model over the batch of sequences instead")
+                "whole model over the batch of sequences instead",
+                code="RPL014", site=handler.name)
 
 
 def _step_factor(tr, plate_budget: int, dims):

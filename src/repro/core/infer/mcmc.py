@@ -35,6 +35,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
 from typing import Optional
 
 import jax
@@ -77,8 +78,12 @@ class MCMC:
     def __init__(self, kernel, num_warmup: int, num_samples: int,
                  num_chains: int = 1, thinning: int = 1,
                  chain_method: str = "vectorized", progress: bool = False,
-                 collect_fields=("z",), jit_model_args: bool = False):
+                 collect_fields=("z",), jit_model_args: bool = False,
+                 validate: bool = False):
         self.kernel = kernel
+        # validate=True lints the kernel's model once per fresh setup (a
+        # pure Python pre-compile pass; the warm sampling path is untouched)
+        self.validate = bool(validate)
         self.num_warmup = int(num_warmup)
         self.num_samples = int(num_samples)
         self.num_chains = int(num_chains)
@@ -167,12 +172,28 @@ class MCMC:
             # programs plus the dataset captured by its closures
             self._exec_cache = {k: v for k, v in self._exec_cache.items()
                                 if k[1] is not old_setup}
+        if self.validate:
+            self._validate_model(model_args, model_kwargs)
         setup = self.kernel.setup(rng_key, self.num_warmup,
                                   init_params=init_params,
                                   model_args=model_args,
                                   model_kwargs=model_kwargs)
         self._setup_cache = (bundle, self.num_warmup, setup)
         return setup
+
+    def _validate_model(self, model_args, model_kwargs):
+        """Lint the kernel's model before building a fresh setup: errors
+        raise with their ``RPL`` code, warnings surface as warnings.  Runs
+        only on the cold path (a cached setup skips it entirely), so
+        ``validate=True`` never touches the compiled sampling loop."""
+        model = getattr(self.kernel, "model", None)
+        if model is None:
+            return  # potential_fn-only kernels have no model to lint
+        from ..lint import lint_model
+        result = lint_model(model, model_args, model_kwargs)
+        for finding in result.warnings:
+            warnings.warn(str(finding), stacklevel=3)
+        result.raise_if_errors()
 
     def _chains_sharding(self):
         n_dev = len(jax.devices())

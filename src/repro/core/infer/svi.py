@@ -2,13 +2,13 @@
 (paper Sec. 3.2 / Appendix D)."""
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..handlers import replay, seed, substitute, trace
+from ..handlers import replay, seed, trace
 from .util import log_density
 
 
@@ -69,13 +69,29 @@ class SVI:
     minibatch from the state's rng key inside the compiled program.
     """
 
-    def __init__(self, model, guide, optim, loss: Trace_ELBO):
+    def __init__(self, model, guide, optim, loss: Trace_ELBO,
+                 validate: bool = False):
         self.model = model
         self.guide = guide
         self.optim = optim
         self.loss = loss
+        # validate=True lints model and guide once, in init() — never in
+        # the jitted update path, so it cannot affect step-time performance.
+        self.validate = bool(validate)
+
+    def _validate(self, args, kwargs):
+        import warnings
+
+        from ..lint import lint_model
+        for label, fn in (("model", self.model), ("guide", self.guide)):
+            result = lint_model(fn, args, kwargs)
+            for finding in result.warnings:
+                warnings.warn(f"{label}: {finding}", stacklevel=3)
+            result.raise_if_errors()
 
     def init(self, rng_key, *args, **kwargs):
+        if self.validate:
+            self._validate(args, kwargs)
         key_init, key_state = jax.random.split(rng_key)
         # discover param sites in both model and guide
         model_trace = trace(seed(self.model, key_init)).get_trace(

@@ -4,17 +4,14 @@ model initialization, and vmap-powered predictive utilities (paper Sec 3.2).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from .. import dist as _dist
 from ..dist.transforms import biject_to
-from ..handlers import block, condition, seed, substitute, trace
-from ..primitives import sample as _sample
+from ..handlers import block, seed, substitute, trace
 
 
 def log_density(model, model_args, model_kwargs, params):

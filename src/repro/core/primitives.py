@@ -35,11 +35,13 @@ from __future__ import annotations
 import warnings
 from collections import namedtuple
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .errors import ReproValueError, ReproWarning
 
 _STACK: list = []  # the global effect-handler stack
 
@@ -61,6 +63,16 @@ def default_process_message(msg: dict) -> None:
     """Produce the message value if no handler already did."""
     if msg["value"] is None:
         if msg["type"] == "sample":
+            if msg["kwargs"]["rng_key"] is None and not msg["is_observed"]:
+                # drawing without a key would crash deep inside jax.random
+                # with a message that names no site; diagnose it here
+                raise ReproValueError(
+                    f"latent sample site '{msg['name']}' reached evaluation "
+                    "without an rng key: no enclosing `seed` handler supplied "
+                    "one and no handler substituted a value. Wrap the model "
+                    "in seed(model, rng_key), or pin the site with "
+                    "substitute/condition.", code="RPL009",
+                    site=msg["name"])
             msg["value"] = msg["fn"](
                 rng_key=msg["kwargs"]["rng_key"],
                 sample_shape=msg["kwargs"]["sample_shape"],
@@ -128,10 +140,10 @@ def sample(
         if obs is not None:
             return obs
         if rng_key is None:
-            raise ValueError(
+            raise ReproValueError(
                 f"sample site '{name}' outside any handler requires an explicit "
-                "rng_key (JAX uses a functional PRNG; see the `seed` handler)."
-            )
+                "rng_key (JAX uses a functional PRNG; see the `seed` handler).",
+                code="RPL009", site=name)
         return fn(rng_key=rng_key, sample_shape=sample_shape)
 
     msg = {
@@ -149,7 +161,42 @@ def sample(
         # caller's dict may be shared across sites / traces
         "infer": dict(infer) if infer else {},
     }
-    return apply_stack(msg)["value"]
+    apply_stack(msg)
+    _check_observed_support(msg)
+    return msg["value"]
+
+
+def _check_observed_support(msg: dict) -> None:
+    """Runtime twin of lint rule RPL005: a *concrete* observed value outside
+    the distribution's support scores ``-inf``/``nan`` silently — diagnose
+    it at the site instead.  Masked sites are exempt (masking dummy values
+    is the documented pattern for ragged data), and traced values are
+    skipped (zero cost on the compiled hot path — the linter covers those
+    pre-compile)."""
+    if not msg["is_observed"] or msg["mask"] is not None:
+        return
+    value = msg["value"]
+    if isinstance(value, jax.core.Tracer):
+        return
+    try:
+        support = msg["fn"].support
+    except NotImplementedError:
+        return
+    if support is None:
+        return
+    try:
+        ok = support(value)
+    except NotImplementedError:
+        return
+    if isinstance(ok, jax.core.Tracer):
+        return
+    if not bool(np.all(np.asarray(ok))):
+        raise ReproValueError(
+            f"observed value at sample site '{msg['name']}' lies outside the "
+            f"distribution's support ({support!r}); its log probability is "
+            "-inf/nan. Fix the data, choose a distribution whose support "
+            "covers it, or mask the offending elements with the `mask` "
+            "handler.", code="RPL005", site=msg["name"])
 
 
 def param(name: str, init_value=None, *, shape=None, init_fn=None, dtype=jnp.float32,
@@ -228,11 +275,11 @@ def _subsample_indices(size, subsample_size, rng_key=None):
     if subsample_size >= size:
         return jnp.arange(size)
     if rng_key is None:
-        warnings.warn(
-            f"subsampled plate (size={size}, subsample_size={subsample_size}) "
-            "traced without an rng key: falling back to deterministic "
-            "arange indices. Wrap the model in a `seed` handler for genuine "
-            "random-minibatch subsampling.",
+        warnings.warn(ReproWarning(
+            f"[RPL012] subsampled plate (size={size}, "
+            f"subsample_size={subsample_size}) traced without an rng key: "
+            "falling back to deterministic arange indices. Wrap the model in "
+            "a `seed` handler for genuine random-minibatch subsampling."),
             stacklevel=2,
         )
         return jnp.arange(subsample_size)
@@ -410,9 +457,9 @@ class plate:
             while dim in occupied:
                 dim -= 1
         elif dim in occupied:
-            raise ValueError(
+            raise ReproValueError(
                 f"plate '{self.name}': dim {dim} already occupied by an "
-                "enclosing plate")
+                "enclosing plate", code="RPL002", site=self.name)
         indices = self._get_indices()  # message runs before we join the stack
         self._frame = CondIndepStackFrame(self._site_name, dim,
                                           self.subsample_size)
@@ -436,6 +483,24 @@ class plate:
                                               frame.dim)
                 if tuple(target) != batch_shape:
                     msg["fn"] = fn.expand(tuple(target))
+            else:
+                # observed/conditioned value: its batch extent at this
+                # plate's dim must broadcast (1 or the plate extent), else
+                # the site's density silently mis-shapes
+                event_dim = getattr(msg["fn"], "event_dim", 0)
+                shape = jnp.shape(msg["value"])
+                batch_shape = shape[:len(shape) - event_dim]
+                if len(batch_shape) >= -frame.dim \
+                        and batch_shape[frame.dim] not in (
+                            1, self.subsample_size):
+                    raise ReproValueError(
+                        f"sample site '{msg['name']}': observed value shape "
+                        f"{shape} has extent {batch_shape[frame.dim]} at dim "
+                        f"{frame.dim} of plate '{self.name}', which "
+                        "broadcasts with neither 1 nor the plate extent "
+                        f"{self.subsample_size}; reshape the data (or move "
+                        "the site out of the plate)",
+                        code="RPL004", site=msg["name"])
             if self.size != self.subsample_size:
                 scale = self.size / self.subsample_size
                 msg["scale"] = (scale if msg["scale"] is None
@@ -452,11 +517,12 @@ class plate:
             elif shape[axis] not in (1, self.subsample_size):
                 # extent 1 broadcasts (mirrors the sample-site rule in
                 # _expanded_shape); anything else is a genuine mismatch
-                raise ValueError(
+                raise ReproValueError(
                     f"subsample inside plate '{self.name}': axis {axis} of "
                     f"data shape {shape} is {shape[axis]}, expected the full "
                     f"size {self.size}, the subsample size "
-                    f"{self.subsample_size}, or a broadcastable 1")
+                    f"{self.subsample_size}, or a broadcastable 1",
+                    code="RPL004", site=self.name)
 
     def postprocess_message(self, msg: dict) -> None:
         pass
@@ -466,10 +532,11 @@ class plate:
         shape = [1] * ndim
         shape[len(shape) - len(batch_shape):] = list(batch_shape)
         if shape[dim] not in (1, self.subsample_size):
-            raise ValueError(
+            raise ReproValueError(
                 f"sample site '{site_name}': batch shape {tuple(batch_shape)} "
                 f"has extent {shape[dim]} at dim {dim} of plate "
                 f"'{self.name}', which broadcasts with neither 1 nor the "
-                f"plate's subsample size {self.subsample_size}")
+                f"plate's subsample size {self.subsample_size}",
+                code="RPL004", site=site_name)
         shape[dim] = self.subsample_size
         return shape

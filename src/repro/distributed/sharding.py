@@ -19,9 +19,8 @@ multi-pod ``(pod=2, data=16, model=16)``.  Design (DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING
 
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 if TYPE_CHECKING:  # annotation-only: importing repro.models at runtime

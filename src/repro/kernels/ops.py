@@ -10,12 +10,61 @@ from __future__ import annotations
 
 import os
 from contextlib import contextmanager
+from typing import NamedTuple, Optional, Tuple
 
 from . import ref
 
 _STATE = {"pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1",
           "interpret": False,
           "ssd_inline": os.environ.get("REPRO_SSD_INLINE", "0") == "1"}
+
+
+class OpSpec(NamedTuple):
+    """Declarative registry entry for one dispatched op (consumed by
+    :mod:`repro.lint_rules.invariants` and its registry-driven tests).
+
+    ``pallas``/``ref`` are ``(module, attr)`` import paths; ``pallas`` is
+    ``None`` for ref-only ops (no kernel exists yet — decode paths).
+    ``bit_identical`` ops must agree with their oracle bit-for-bit in
+    interpret mode (the enum-contract contract: enumeration results feed
+    exact marginalization); others must agree to ``tol`` max-abs error.
+    """
+
+    name: str
+    pallas: Optional[Tuple[str, str]]
+    ref: Tuple[str, str]
+    bit_identical: bool
+    tol: float
+
+
+# Every public op this module dispatches, exactly once.  The invariant
+# checker (RPL201) asserts this table and the module's public callables
+# stay in bijection (minus the _CONTROL context managers below), so a new
+# kernel cannot land without a ref oracle and a parity bound.
+OP_TABLE = (
+    OpSpec("attention", ("repro.kernels.flash_attention", "flash_attention"),
+           ("repro.kernels.ref", "attention"), False, 2e-4),
+    OpSpec("decode_attention", None,
+           ("repro.kernels.ref", "decode_attention"), False, 0.0),
+    OpSpec("mla_absorbed_decode", None,
+           ("repro.kernels.ref", "mla_absorbed_decode"), False, 0.0),
+    OpSpec("leapfrog_halfstep", ("repro.kernels.leapfrog",
+                                 "leapfrog_halfstep"),
+           ("repro.kernels.leapfrog", "leapfrog_halfstep_ref"), False, 1e-6),
+    OpSpec("enum_contract", ("repro.kernels.enum_contract", "enum_contract"),
+           ("repro.kernels.ref", "enum_contract"), True, 0.0),
+    OpSpec("rmsnorm", ("repro.kernels.rmsnorm", "rmsnorm"),
+           ("repro.kernels.ref", "rmsnorm"), False, 2e-5),
+    OpSpec("softmax_xent", ("repro.kernels.softmax_xent", "softmax_xent"),
+           ("repro.kernels.ref", "softmax_xent"), False, 1e-4),
+    OpSpec("ssd_scan", ("repro.kernels.ssd_scan", "ssd_scan"),
+           ("repro.kernels.ref", "ssd_scan"), False, 1e-4),
+    OpSpec("ssd_decode_step", None,
+           ("repro.kernels.ref", "ssd_decode_step"), False, 0.0),
+)
+
+# public callables that are dispatch *controls*, not ops
+_CONTROL = frozenset({"use_pallas", "pallas_enabled", "ssd_inline"})
 
 
 @contextmanager

@@ -16,7 +16,6 @@ with loop multipliers taken from each while op's
 """
 from __future__ import annotations
 
-import json
 import re
 from typing import Dict
 

@@ -19,7 +19,6 @@ from repro import optim
 from repro.core import bayes, dist
 from repro.core.primitives import sample
 from repro.models import LM, ModelConfig, ShapeConfig
-from repro.models.config import SHAPES
 
 
 @dataclasses.dataclass(frozen=True)

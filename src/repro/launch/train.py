@@ -9,13 +9,10 @@ deterministic-by-step so restarts replay their exact shard.
 from __future__ import annotations
 
 import argparse
-import os
 import signal
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.data import SyntheticLMData, SyntheticSeq2SeqData

@@ -1,0 +1,42 @@
+"""``repro.lint`` — the static analyzer's public face.
+
+Python API (re-exported from :mod:`repro.core.lint` and
+:mod:`repro.lint_rules.invariants`)::
+
+    from repro.lint import lint_model, analyze
+    result = lint_model(model, (x,), {"y": y})
+    result.raise_if_errors()
+
+CLI::
+
+    python -m repro.lint examples/quickstart.py:logistic_regression \
+        --factory examples/quickstart.py:make_lint_args
+    python -m repro.lint --corpus     # every example/benchmark model
+
+Rule codes are documented in ``docs/lint.md``; the registry lives in
+:mod:`repro.lint_rules`.
+"""
+from ..core.lint import (Finding, LintResult, analyze,
+                         check_time_independence, count_eqns, lint_model)
+from ..lint_rules import RULES, Rule, rule
+from ..lint_rules.invariants import (check_parity,
+                                     check_registry_completeness,
+                                     check_signatures, verify_kernel_setup,
+                                     verify_registry)
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "RULES",
+    "Rule",
+    "analyze",
+    "check_parity",
+    "check_registry_completeness",
+    "check_signatures",
+    "check_time_independence",
+    "count_eqns",
+    "lint_model",
+    "rule",
+    "verify_kernel_setup",
+    "verify_registry",
+]

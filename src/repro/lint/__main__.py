@@ -1,0 +1,172 @@
+"""CLI for the static analyzer.
+
+Single model::
+
+    python -m repro.lint <module-or-file.py>:<model> [--factory spec] \
+        [--simulate] [--max-plate-nesting N]
+
+``--factory`` names a callable returning the model inputs — either
+``(args, kwargs)`` or ``(model, args, kwargs)`` (the latter overrides the
+positional target, for models built by closures).
+
+Corpus mode (the CI ``lint-corpus`` step)::
+
+    python -m repro.lint --corpus
+
+lints every model in ``examples/`` and ``benchmarks/models.py`` with small
+synthesized data, then executes the fenced blocks of ``docs/lint.md``
+(each rule's minimal failing model asserts its own code fires).  Exit code
+0 means every model passed clean and every documented defect was caught.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+from . import lint_model
+
+ROOT = Path(__file__).resolve().parents[3]
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _load_module(spec: str):
+    if spec.endswith(".py"):
+        path = Path(spec)
+        if not path.is_absolute():
+            path = Path.cwd() / path
+        name = "_lint_target_" + path.stem
+        mspec = importlib.util.spec_from_file_location(name, path)
+        module = importlib.util.module_from_spec(mspec)
+        sys.modules[name] = module
+        mspec.loader.exec_module(module)
+        return module
+    return importlib.import_module(spec)
+
+
+def _load_attr(target: str):
+    module, sep, attr = target.partition(":")
+    if not sep:
+        raise SystemExit(f"target {target!r} must look like module:attr "
+                         "or path.py:attr")
+    return getattr(_load_module(module), attr)
+
+
+def _lint_one(label, model, args=(), kwargs=None, **lint_kwargs):
+    result = lint_model(model, args, kwargs, **lint_kwargs)
+    status = "ok" if result.ok else "FAIL"
+    print(f"[{status}] {label}")
+    for finding in result.findings:
+        print(f"    {finding}")
+    return result.ok
+
+
+def _example(name):
+    return _load_module(str(ROOT / "examples" / f"{name}.py"))
+
+
+def _corpus_entries():
+    """(label, model, args, kwargs) for every lintable repo model."""
+    import jax.numpy as jnp
+    from jax import random
+
+    sys.path.insert(0, str(ROOT))  # benchmarks.* imports
+    from benchmarks import models as bm
+
+    qs = _example("quickstart")
+    x = random.normal(random.PRNGKey(0), (50, 3))
+    y = (x @ jnp.ones(3) > 0).astype(jnp.float32)
+    yield ("examples/quickstart.py:logistic_regression",
+           qs.logistic_regression, (x,), {"y": y})
+
+    es = _example("eight_schools")
+    yield ("examples/eight_schools.py:eight_schools",
+           es.eight_schools, (), {"y": es.y})
+
+    gm = _example("gmm")
+    gx, _ = gm.make_data(random.PRNGKey(0))
+    yield ("examples/gmm.py:gmm", gm.gmm, (gx,), {})
+
+    mb = _example("minibatch_svi")
+    mx = random.normal(random.PRNGKey(1), (mb.N, mb.D))
+    my = (mx @ mb.TRUE_COEFS > 0).astype(jnp.float32)
+    yield ("examples/minibatch_svi.py:make_model(100)",
+           mb.make_model(100), (mx,), {"y": my})
+
+    yield ("benchmarks/models.py:hmm_model", bm.hmm_model,
+           (bm.hmm_data(T=60, T_sup=20),), {})
+    yield ("benchmarks/models.py:enum_hmm_model", bm.enum_hmm_model,
+           (bm.enum_hmm_data(K=3, T=12),), {})
+    cv = bm.covtype_data(n=200, d=8)
+    yield ("benchmarks/models.py:logreg_model", bm.logreg_model,
+           (cv["x"],), {"y": cv["y"]})
+    sk = bm.skim_data(p=10)
+    yield ("benchmarks/models.py:skim_model", bm.skim_model,
+           (sk["x"],), {"y": sk["y"]})
+
+
+def _run_docs(path: Path) -> bool:
+    """Execute a doc's fenced python blocks top-to-bottom in one shared
+    namespace (the docs-smoke contract) — lint.md blocks assert their own
+    rule codes fire."""
+    if not path.exists():
+        print(f"[skip] {path} (missing)")
+        return True
+    namespace: dict = {}
+    blocks = _FENCE.findall(path.read_text())
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"{path.name}[block {i}]", "exec"), namespace)
+        except Exception as e:  # noqa: BLE001 — report which block broke
+            print(f"[FAIL] {path.name} block {i}: {type(e).__name__}: {e}")
+            return False
+    print(f"[ok] {path.name} ({len(blocks)} fenced blocks)")
+    return True
+
+
+def _corpus() -> int:
+    ok = True
+    for label, model, args, kwargs in _corpus_entries():
+        ok &= _lint_one(label, model, args, kwargs)
+    ok &= _run_docs(ROOT / "docs" / "lint.md")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.lint",
+                                     description=__doc__)
+    parser.add_argument("target", nargs="?",
+                        help="module:model or path.py:model")
+    parser.add_argument("--factory",
+                        help="module:fn returning (args, kwargs) or "
+                        "(model, args, kwargs)")
+    parser.add_argument("--simulate", action="store_true",
+                        help="lint as a bare simulation (no implicit seed)")
+    parser.add_argument("--max-plate-nesting", type=int, default=None)
+    parser.add_argument("--corpus", action="store_true",
+                        help="lint every example/benchmark/docs model")
+    ns = parser.parse_args(argv)
+
+    if ns.corpus:
+        return _corpus()
+    if not ns.target:
+        parser.error("a target (module:model) or --corpus is required")
+    model = _load_attr(ns.target)
+    args, kwargs = (), {}
+    if ns.factory:
+        produced = _load_attr(ns.factory)()
+        if len(produced) == 3:
+            model, args, kwargs = produced
+        else:
+            args, kwargs = produced
+    mode = "simulate" if ns.simulate else "density"
+    ok = _lint_one(ns.target, model, args, kwargs, mode=mode,
+                   max_plate_nesting=ns.max_plate_nesting)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

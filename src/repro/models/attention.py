@@ -11,14 +11,12 @@ the pure-jnp references share one call site.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.primitives import param
 from repro.kernels import ops
-from repro.models.common import apply_rope, normal_init, rope_frequencies, zeros_init
+from repro.models.common import apply_rope, normal_init, zeros_init
 from repro.models.config import ModelConfig
 
 

@@ -10,7 +10,6 @@ handlers are transparent to the tracer.
 """
 from __future__ import annotations
 
-import dataclasses
 from contextlib import contextmanager
 from typing import Optional, Sequence
 

@@ -18,8 +18,7 @@ dense-prefix) scan over the *period* with the pattern unrolled inside.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +31,8 @@ from repro.models import mlp as mlpm
 from repro.models import ssm as ssmm
 from repro.models import common
 from repro.models.common import (constrain, normal_init, rmsnorm_weight,
-                                 rope_frequencies, zeros_init)
-from repro.models.config import ModelConfig, ShapeConfig
+                                 rope_frequencies)
+from repro.models.config import ModelConfig
 
 REMAT_POLICIES = {
     "none": None,

@@ -8,7 +8,6 @@ checkpoint/resume bit-identity through the ensemble adaptation state, and
 the pooling primitives against numpy oracles.
 """
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,6 @@ from repro.core.handlers import reparam
 from repro.core.infer import (ChEES, MCMC, NUTS, chees_setup,
                               effective_sample_size, gelman_rubin)
 from repro.core.infer.hmc_util import (
-    WelfordState,
     chain_mean,
     chain_sum,
     welford_batch,

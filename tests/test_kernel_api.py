@@ -5,7 +5,6 @@ any number of vmapped chains, re-running reproduces draws bit-for-bit, and
 nothing on the kernel object mutates.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax import lax, random
 

@@ -1,8 +1,5 @@
 """distributed.sharding: rule construction and divisibility guards (pure
 logic — no devices needed)."""
-import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -5,7 +5,7 @@ from jax import random, vmap
 
 import repro.core as pc
 from repro.core import dist
-from repro.core.handlers import condition, seed, trace
+from repro.core.handlers import condition, seed
 from repro.core.infer import (SVI, AutoNormal, Predictive, Trace_ELBO,
                               log_likelihood)
 from repro import optim
