@@ -1,0 +1,208 @@
+"""Hot-path kernel benchmarks: the ops behind the PR-7 roofline expansion.
+
+Four measurements, all feeding the ``kernels`` section of
+``bench_summary.json``:
+
+1. **per-op ms + roofline fraction** — `leapfrog_halfstep_batch`,
+   `mala_step`, `glm_potential_grad` on hot-path shapes, scored against the
+   *measured* copy bandwidth of this machine
+   (``roofline.copy_bandwidth_gbs``).  The Pallas column is only real on a
+   TPU backend; on CPU it is ``None`` with a note (interpret mode measures
+   the interpreter, not the kernel).
+2. **GLM fused vs plain value_and_grad** — one `value_and_grad` of the
+   fused potential (`infer={"potential": "glm"}` → one pass over X through
+   `ops.glm_potential_grad` + O(d) custom-vjp backward) against the XLA
+   forward+VJP pair of the plain potential, at n in {5k, 20k}, d=54.
+3. **NUTS ms/leapfrog, plain vs glm-marked** — the end-to-end effect of
+   (2) inside the jit'd executor on the CoverType-shaped logreg at
+   n=20,000 (the acceptance shape).
+4. **ChEES 64-chain warm wall** — the quick-mode configuration whose PR-5
+   headline was ~5.7 s, now running the chain-batched megakernel
+   trajectory (`velocity_verlet_batch`) instead of `vmap(halfstep)`.
+"""
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import random
+
+from benchmarks import roofline
+from benchmarks.models import covtype_data, logreg_model, logreg_model_glm
+from repro.kernels import ops
+
+
+def _best_ms(fn, iters=30):
+    """Best-of wall time of a blocking thunk, in ms (first call discarded:
+    it may compile)."""
+    fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _op_rows(on_tpu):
+    """Per-op timings on hot-path shapes, ref path vs (TPU-only) Pallas."""
+    C, D = 64, 4096
+    n, d = 20_000, 54
+    ks = random.split(random.PRNGKey(0), 6)
+    z, r, g, noise = (random.normal(k, (C, D)) for k in ks[:4])
+    m_inv = jnp.abs(random.normal(ks[4], (D,))) + 0.5
+    x = random.normal(ks[5], (n, d))
+    y = (random.uniform(random.PRNGKey(1), (n,)) < 0.5).astype(jnp.float32)
+    w = random.normal(random.PRNGKey(2), (d,)) * 0.1
+    f4 = 4  # f32 bytes
+
+    eps = jnp.asarray(0.01)
+    cases = [
+        # read z/r/grad + m_inv, write z/r.  Operands are jit *arguments*,
+        # never closed-over constants — a nullary jit constant-folds the
+        # whole op away and times the result cache.
+        ("leapfrog_halfstep_batch", f"C={C} D={D}",
+         (5 * C * D + D) * f4,
+         lambda zz, rr, gg, mm, ee: ops.leapfrog_halfstep_batch(
+             zz, rr, gg, mm, ee),
+         (z, r, g, m_inv, eps)),
+        # read z/grad/noise + m_inv, write z'
+        ("mala_step", f"C={C} D={D}", (4 * C * D + D) * f4,
+         lambda zz, gg, nn, mm, ee: ops.mala_step(zz, gg, nn, mm, ee),
+         (z, g, noise, m_inv, eps)),
+        # read X (+ y), write nll + grad: one pass serves value AND grad
+        ("glm_potential_grad", f"n={n} d={d}", (n * d + 2 * n + 2 * d) * f4,
+         lambda xx, yy, ww: ops.glm_potential_grad(xx, yy, ww),
+         (x, y, w)),
+    ]
+    rows = []
+    for name, shape, nbytes, fn, operands in cases:
+        jitted = jax.jit(fn)
+        ref_ms = _best_ms(
+            lambda: jax.block_until_ready(jitted(*operands)))
+        pallas_ms = None
+        if on_tpu:
+            with ops.use_pallas(True):
+                pjit = jax.jit(fn)
+                pallas_ms = _best_ms(
+                    lambda: jax.block_until_ready(pjit(*operands)))
+        # roofline at THIS op's working-set size: a ~5 MB op runs out of
+        # cache where the 64 MB streaming copy runs out of DRAM
+        peak = roofline.copy_bandwidth_gbs(nbytes=max(nbytes // 2, 1 << 20))
+        rows.append({"op": name, "shape": shape, "bytes_moved": nbytes,
+                     "ref_ms": ref_ms, "pallas_ms": pallas_ms,
+                     "peak_gbs": peak})
+        print(f"  {name:26s} {shape:16s} ref {ref_ms:8.3f} ms"
+              + (f"  pallas {pallas_ms:8.3f} ms" if pallas_ms is not None
+                 else "  pallas —")
+              + f"  (roofline {peak:.1f} GB/s at working-set size)",
+              flush=True)
+    return rows
+
+
+def _glm_value_and_grad(sizes=(5_000, 20_000), d=54):
+    """jit(value_and_grad(potential)) — plain XLA forward+VJP vs the fused
+    single-pass potential, same model, same data, same probe point."""
+    from repro.core.infer.util import initialize_model_structure
+
+    rows = []
+    for n in sizes:
+        data = covtype_data(n=n, d=d)
+        args, kw = (data["x"],), {"y": data["y"]}
+        zp = random.normal(random.PRNGKey(3), (d,)) * 0.1
+        out = {"n": n, "d": d}
+        for label, model in (("plain", logreg_model),
+                             ("fused", logreg_model_glm)):
+            pot = initialize_model_structure(random.PRNGKey(0), model,
+                                             args, kw)[0]
+            vg = jax.jit(jax.value_and_grad(pot))
+            out[f"{label}_ms"] = _best_ms(
+                lambda: jax.block_until_ready(vg(zp)))
+        out["speedup"] = out["plain_ms"] / max(out["fused_ms"], 1e-9)
+        rows.append(out)
+        print(f"  value_and_grad n={n:6d}: plain {out['plain_ms']:.3f} ms, "
+              f"fused {out['fused_ms']:.3f} ms "
+              f"({out['speedup']:.2f}x)", flush=True)
+    return rows
+
+
+def _nuts_glm(quick):
+    """End-to-end ms/leapfrog of NUTS on the plain vs glm-marked logreg at
+    the acceptance shape (n=20,000, d=54)."""
+    from benchmarks.harness import run_nuts
+
+    n = 20_000
+    warm, samp = (100, 100) if quick else (200, 200)
+    data = covtype_data(n=n)
+    rows = {}
+    for label, model in (("plain", logreg_model), ("glm", logreg_model_glm)):
+        r = run_nuts(model, (data["x"],), {"y": data["y"]},
+                     num_warmup=warm, num_samples=samp)
+        rows[label] = r
+        print(f"  nuts[{label:5s}] n={n}: {r['ms_per_leapfrog']:.4f} "
+              f"ms/leapfrog (warm wall {r['warm_wall_s']:.2f}s, "
+              f"min_ess {r['min_ess']:.0f})", flush=True)
+    speedup = (rows["plain"]["ms_per_leapfrog"]
+               / max(rows["glm"]["ms_per_leapfrog"], 1e-12))
+    print(f"  glm-marked speedup: {speedup:.2f}x", flush=True)
+    return {"n": n, "num_warmup": warm, "num_samples": samp,
+            "plain": rows["plain"], "glm": rows["glm"],
+            "ms_per_leapfrog_speedup": speedup}
+
+
+def _chees_warm_wall():
+    """The PR-5 quick headline configuration (64 chains, 150/150, logreg
+    n=1000 d=16) — now on the megakernel trajectory path."""
+    from benchmarks.chees import _run_one, covtype_like
+    from repro.core.infer import ChEES
+
+    data = covtype_like(n=1_000, d=16)
+    r = _run_one(ChEES(logreg_model), 64, 150, 150, data)
+    print(f"  chees 64 chains: warm wall {r['wall_s']:.2f}s "
+          f"({r['samples_per_sec']:.0f} samples/s, "
+          f"ESS/s {r['ess_per_sec']:.1f})", flush=True)
+    return r
+
+
+def main(quick=False):
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    peak_gbs = roofline.copy_bandwidth_gbs()
+    print(f"  backend={backend}; measured copy roofline "
+          f"{peak_gbs:.1f} GB/s", flush=True)
+
+    op_rows = _op_rows(on_tpu)
+    for r in op_rows:
+        r["ref_roofline_fraction"] = roofline.kernel_fraction(
+            r["bytes_moved"], r["ref_ms"] / 1e3, r["peak_gbs"])
+        r["pallas_roofline_fraction"] = (
+            roofline.kernel_fraction(r["bytes_moved"],
+                                     r["pallas_ms"] / 1e3, r["peak_gbs"])
+            if r["pallas_ms"] is not None else None)
+    print(roofline.kernel_markdown(op_rows, peak_gbs), flush=True)
+
+    glm_rows = _glm_value_and_grad()
+    nuts_glm = _nuts_glm(quick)
+    chees64 = _chees_warm_wall()
+
+    rec = {
+        "benchmark": "kernels_hotpath",
+        "backend": backend,
+        "copy_bandwidth_gbs": peak_gbs,
+        "note": None if on_tpu else
+        "pallas columns need a TPU backend; interpret mode measures the "
+        "interpreter, not the kernel — ref-path numbers are the CPU truth",
+        "ops": op_rows,
+        "glm_value_and_grad": glm_rows,
+        "nuts_glm": nuts_glm,
+        "chees_64_chains": chees64,
+    }
+    print(json.dumps({k: v for k, v in rec.items() if k != "ops"},
+                     indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -120,6 +120,16 @@ def logreg_model(x, y=None):
     return pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y)
 
 
+def logreg_model_glm(x, y=None):
+    """Same model, opted into the fused GLM potential: the likelihood value
+    AND its gradient come from one ``ops.glm_potential_grad`` pass over x
+    (verified affine at setup; falls back to the plain potential if not)."""
+    d = x.shape[-1]
+    w = pc.sample("w", dist.Normal(jnp.zeros(d), jnp.ones(d)).to_event(1))
+    return pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+                     infer={"potential": "glm"})
+
+
 # ---------------------------------------------------------------------------
 # SKIM — sparse kernel interaction model (Agrawal et al. 2019)
 # ---------------------------------------------------------------------------

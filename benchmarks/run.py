@@ -35,6 +35,16 @@ def _previous_headlines():
             if "ess_per_sec_ratio_at_max_chains" in prev[k]:
                 keep[k]["ess_per_sec_ratio_at_max_chains"] = \
                     prev[k]["ess_per_sec_ratio_at_max_chains"]
+    if isinstance(prev.get("kernels"), dict):
+        kern = prev["kernels"]
+        keep["kernels"] = {
+            "ops": kern.get("ops"),
+            "copy_bandwidth_gbs": kern.get("copy_bandwidth_gbs"),
+            "nuts_glm_ms_per_leapfrog_speedup":
+                (kern.get("nuts_glm") or {}).get("ms_per_leapfrog_speedup"),
+            "chees_64_warm_wall_s":
+                (kern.get("chees_64_chains") or {}).get("wall_s"),
+        }
     return keep or None
 
 
@@ -102,6 +112,13 @@ def main():
     out["skim"] = skim.main(quick=quick)
 
     print("=" * 70)
+    print("Hot-path kernels — per-op ms + roofline fraction, GLM fused vs "
+          "plain, ChEES 64-chain warm wall")
+    print("=" * 70, flush=True)
+    from benchmarks import kernels_bench
+    out["kernels"] = kernels_bench.main(quick=quick)
+
+    print("=" * 70)
     print("Static analyzer — lint_ms on logreg (cost of validate=True)")
     print("=" * 70, flush=True)
     out["lint"] = _lint_bench()
@@ -121,8 +138,12 @@ def main():
         out["previous"] = previous
     with open(os.path.join(RESULTS, "bench_summary.json"), "w") as f:
         json.dump(out, f, indent=1)
+    # per-PR snapshot: bench_summary.json is overwritten every run, the
+    # BENCH_<n>.json files accumulate the trajectory
+    with open(os.path.join(RESULTS, "BENCH_7.json"), "w") as f:
+        json.dump(out, f, indent=1)
     print(f"\nall benchmarks done in {out['total_wall_s']:.0f}s; summary in "
-          f"{RESULTS}/bench_summary.json")
+          f"{RESULTS}/bench_summary.json (snapshot: BENCH_7.json)")
 
 
 if __name__ == "__main__":

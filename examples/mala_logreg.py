@@ -1,0 +1,65 @@
+"""Cheap high-volume inference: batched MALA and random-walk Metropolis.
+
+Both kernels implement the batch-aware ``cross_chain`` contract — the whole
+(chains, dim) ensemble moves through one chain-batched proposal kernel
+(:func:`repro.kernels.ops.mala_step`) per draw, and warmup pools the step
+size (cross-chain dual averaging) and the diagonal preconditioner (pooled
+Welford) across every chain, exactly like ChEES-HMC.  At one gradient per
+draw (MALA) or zero (RWM), raw draws/sec beat trajectory-based samplers on
+well-conditioned posteriors — the serving-scale regime: many chains, short
+runs.
+
+    PYTHONPATH=src python examples/mala_logreg.py
+"""
+import jax.numpy as jnp
+from jax import random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.infer import MALA, MCMC, RWM, print_summary
+
+
+def logistic_regression(x, y=None):
+    """The quickstart model, marked for the fused GLM potential: value and
+    gradient of the Bernoulli-logit likelihood come from one pass over x."""
+    ndims = x.shape[-1]
+    m = pc.sample("m", dist.Normal(0.0, jnp.ones(ndims)).to_event(1))
+    b = pc.sample("b", dist.Normal(0.0, 1.0))
+    return pc.sample("y", dist.Bernoulli(logits=x @ m + b), obs=y,
+                     infer={"potential": "glm"})
+
+
+def location_scale(y=None, n=80):
+    """A tiny location-scale model for the gradient-free RWM kernel."""
+    mu = pc.sample("mu", dist.Normal(0.0, 5.0))
+    sigma = pc.sample("sigma", dist.LogNormal(0.0, 1.0))
+    with pc.plate("data", n if y is None else y.shape[0]):
+        return pc.sample("y", dist.Normal(mu, sigma), obs=y)
+
+
+def main():
+    true_coefs = jnp.array([1.0, 2.0, 3.0])
+    x = random.normal(random.PRNGKey(0), (200, 3))
+    y = dist.Bernoulli(logits=x @ true_coefs).sample(
+        rng_key=random.PRNGKey(3))
+
+    # 64 chains in lockstep: one (64, 4) proposal per draw, pooled warmup
+    mcmc = MCMC(MALA(logistic_regression), num_warmup=1000,
+                num_samples=1000, num_chains=64)
+    mcmc.run(random.PRNGKey(1), x, y=y)
+    samples = mcmc.get_samples()
+    print("MALA posterior (64 chains x 1000 draws):")
+    print_summary(mcmc.get_samples(group_by_chain=True))
+    m = samples["m"].mean(0)
+    print(f"posterior mean coefs: {m} (true {true_coefs})")
+
+    y_obs = 1.5 + 0.8 * random.normal(random.PRNGKey(4), (80,))
+    mcmc = MCMC(RWM(location_scale), num_warmup=1000, num_samples=1000,
+                num_chains=64)
+    mcmc.run(random.PRNGKey(2), y=y_obs)
+    print("RWM posterior (zero gradients per draw):")
+    print_summary(mcmc.get_samples(group_by_chain=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,12 @@ from .hmc import (
     nuts_setup,
 )
 from .kernel_api import KernelSetup, SamplerKernel, init_state, sample
+from .mala import (
+    MALA,
+    RWM,
+    MRWState,
+    mrw_setup,
+)
 from .mcmc import MCMC
 from .svi import SVI, SVIState, Trace_ELBO
 from .util import (
@@ -48,6 +54,7 @@ __all__ = [
     "KernelSetup", "SamplerKernel", "init_state", "sample",
     "hmc_setup", "hmc_init", "nuts_setup", "nuts_init",
     "ChEES", "ChEESState", "chees_setup", "chees_init",
+    "MALA", "RWM", "MRWState", "mrw_setup",
     "config_enumerate", "contract_enum_factors", "enum", "infer_discrete",
     "markov",
     "AutoNormal", "Predictive", "log_density", "log_likelihood",

@@ -73,6 +73,7 @@ from .hmc_util import (
     momentum_sample,
     velocity,
     velocity_verlet,
+    velocity_verlet_batch,
     welford_batch,
     welford_combine,
     welford_covariance,
@@ -202,6 +203,7 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, adapt_step_size,
     """Pure ensemble transition ``ChEESState -> ChEESState``."""
     in_middle_window, window_end_is_middle = window_predicates(schedule)
     _, vv_update = velocity_verlet(potential_fn)
+    vv_trajectory = velocity_verlet_batch(potential_fn)
     # static trajectory-length bounds: wide enough to be inert for any sane
     # posterior; tying them to the (oscillating) step size would let dual-
     # averaging transients yank the learned trajectory around via the clip
@@ -209,7 +211,12 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, adapt_step_size,
 
     def integrate(step_size, imm, istate, num_steps):
         """One batch-uniform loop: every chain advances the same number of
-        leapfrog steps, each step one dense vmapped fused halfstep + grad."""
+        leapfrog steps.  The diagonal-mass path (always, for ChEES) walks
+        the whole (C, D) ensemble through the chain-batched megakernel
+        trajectory — merged interior kicks, no per-chain vmap layout churn;
+        a dense mass matrix would fall back to the vmapped scalar step."""
+        if imm.ndim == 1:
+            return vv_trajectory(step_size, imm, istate, num_steps)
         step_all = jax.vmap(lambda s: vv_update(step_size, imm, s))
         return lax.fori_loop(0, num_steps, lambda _, s: step_all(s), istate)
 

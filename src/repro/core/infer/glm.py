@@ -1,0 +1,161 @@
+"""Opt-in fused GLM potential: route a model's dominant likelihood term
+through the single-pass ``ops.glm_potential_grad`` kernel.
+
+A model opts in by marking its observed site::
+
+    pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+              infer={"potential": "glm"})
+
+At setup time (:func:`~repro.core.infer.util.initialize_model_structure`,
+one-time Python-level work) the site's linear predictor is extracted by
+differentiating the traced predictor at zero — ``offset = predictor(0)``,
+``X = jacfwd(predictor)(0)`` — and *verified* affine at two random probes;
+the fused potential is then
+
+    potential(z) = potential_energy(block(model, hide=[site]), z) + nll(z)
+
+i.e. the exact prior + transform log-det through the normal machinery and
+the likelihood through the fused kernel, wrapped in ``jax.custom_vjp`` so
+the backward pass is the O(d) residual product the kernel already computed
+— instead of XLA's n-vector reverse chains.  Any structural surprise
+(non-affine predictor, probs-parametrized Bernoulli, non-constant Normal
+scale, site-level scale/mask, enumeration marks) falls back to the plain
+potential with a warning: the fusion is an optimization, never a semantics
+change.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops
+from ..handlers import block, seed, substitute, trace
+
+
+def _unwrap(fn):
+    while hasattr(fn, "base_dist"):
+        fn = fn.base_dist
+    return fn
+
+
+def _fallback(name, reason):
+    warnings.warn(
+        f"site '{name}' requested infer={{'potential': 'glm'}} but {reason}"
+        "; falling back to the plain potential.", stacklevel=3)
+    return None
+
+
+def maybe_fuse_glm_potential(model, model_args, model_kwargs, transforms,
+                             unravel_fn, flat_proto, model_trace,
+                             potential_flat):
+    """Return a fused flat potential function, or None to keep the plain
+    one.  ``model`` is the (config_enumerate-wrapped) model whose trace is
+    ``model_trace``; verification runs on concrete arrays at setup time."""
+    marked = [name for name, site in model_trace.items()
+              if site["type"] == "sample" and site["is_observed"]
+              and site["infer"].get("potential") == "glm"]
+    if not marked:
+        return None
+    if len(marked) > 1:
+        return _fallback(marked[0], f"{len(marked)} sites are marked "
+                         "(only a single GLM likelihood can be fused)")
+    name = marked[0]
+    site = model_trace[name]
+    if site["scale"] is not None or site["mask"] is not None:
+        return _fallback(name, "the site carries a scale/mask modifier "
+                         "(subsampled plate or mask handler)")
+    if any(s["infer"].get("enumerate") == "parallel"
+           for s in model_trace.values() if s["type"] == "sample"):
+        return _fallback(name, "the model has enumerated discrete latents")
+    fn = _unwrap(site["fn"])
+    kind = type(fn).__name__
+    if kind == "Bernoulli":
+        if fn.logits is None:
+            return _fallback(name, "the Bernoulli is probs-parametrized "
+                             "(fusion needs the logits parametrization)")
+        family, read = "bernoulli_logit", lambda d: _unwrap(d).logits
+    elif kind == "Normal":
+        family, read = "normal", lambda d: _unwrap(d).loc
+    else:
+        return _fallback(name, f"its distribution is {kind} (supported: "
+                         "Bernoulli(logits=...), Normal)")
+    y = jnp.asarray(site["value"])
+    if y.ndim != 1:
+        return _fallback(name, f"observations have shape {y.shape} "
+                         "(fusion expects a flat (n,) vector)")
+
+    model_kwargs = model_kwargs or {}
+    key = jax.random.PRNGKey(0)
+
+    def predictor(zflat):
+        uncon = unravel_fn(zflat)
+        params = {n: t(uncon[n]) for n, t in transforms.items()}
+        with block():
+            tr = trace(substitute(seed(model, key), data=params)) \
+                .get_trace(*model_args, **model_kwargs)
+        return read(tr[name]["fn"]).astype(jnp.float32), tr[name]["fn"]
+
+    try:
+        zeros = jnp.zeros_like(flat_proto)
+        offset, fn0 = predictor(zeros)
+        x = jax.jacfwd(lambda z: predictor(z)[0])(zeros)   # (n, D)
+        scale = None
+        if family == "normal":
+            s = jnp.asarray(_unwrap(fn0).scale)
+            if s.size > 1 and not bool(jnp.all(s == s.reshape(-1)[0])):
+                return _fallback(name, "the Normal scale varies across "
+                                 "observations (kernel takes one scalar)")
+            scale = s.reshape(-1)[0]
+        # verify affinity (and scale constancy) at two random probes
+        for k in jax.random.split(jax.random.PRNGKey(1), 2):
+            z = jax.random.normal(k, flat_proto.shape) * 0.5
+            pred, fnz = predictor(z)
+            lin = x @ z + offset
+            tol = 1e-4 * (1.0 + float(jnp.max(jnp.abs(lin))))
+            if not bool(jnp.all(jnp.abs(pred - lin) <= tol)):
+                return _fallback(name, "its predictor is not affine in the "
+                                 "unconstrained latents")
+            if family == "normal":
+                sz = jnp.asarray(_unwrap(fnz).scale)
+                if not bool(jnp.all(sz == s)):
+                    return _fallback(name, "the Normal scale depends on "
+                                     "the latents")
+    except Exception as e:  # noqa: BLE001 — tracing surprises => plain path
+        return _fallback(name, f"predictor extraction failed "
+                         f"({type(e).__name__}: {e})")
+
+    @jax.custom_vjp
+    def nll(zflat):
+        return ops.glm_potential_grad(x, y, zflat, offset, scale,
+                                      family)[0]
+
+    def nll_fwd(zflat):
+        val, grad = ops.glm_potential_grad(x, y, zflat, offset, scale,
+                                           family)
+        return val, grad
+
+    def nll_bwd(grad, ct):
+        return (ct * grad,)
+
+    nll.defvjp(nll_fwd, nll_bwd)
+
+    from .util import potential_energy
+    prior_model = block(model, hide=[name])
+
+    def fused_potential(zflat):
+        prior = potential_energy(prior_model, model_args, model_kwargs,
+                                 transforms, unravel_fn(zflat))
+        return prior + nll(zflat)
+
+    # end-to-end verification: fused == plain at a probe point
+    try:
+        zp = jax.random.normal(jax.random.PRNGKey(2), flat_proto.shape) * 0.5
+        a, b = fused_potential(zp), potential_flat(zp)
+        if not bool(jnp.abs(a - b) <= 1e-4 * (1.0 + jnp.abs(b))):
+            return _fallback(name, f"fused potential mismatch ({a} vs {b})")
+    except Exception as e:  # noqa: BLE001
+        return _fallback(name, f"fused potential verification failed "
+                         f"({type(e).__name__}: {e})")
+    return fused_potential

@@ -152,6 +152,16 @@ def initialize_model_structure(rng_key, model, model_args=(),
     def constrain(zflat):
         return transform_fn(transforms, unravel_fn(zflat))
 
+    # Opt-in fused GLM likelihood (infer={"potential": "glm"} on an observed
+    # site): one kernel pass serves potential value AND gradient.  Verified
+    # structurally at setup; any surprise falls back to the plain closure.
+    from .glm import maybe_fuse_glm_potential
+    fused = maybe_fuse_glm_potential(model, model_args, model_kwargs,
+                                     transforms, unravel_fn, flat_proto, tr,
+                                     potential_flat)
+    if fused is not None:
+        potential_flat = fused
+
     return potential_flat, unravel_fn, transforms, constrain, tr, flat_proto
 
 

@@ -51,6 +51,15 @@ OP_TABLE = (
     OpSpec("leapfrog_halfstep", ("repro.kernels.leapfrog",
                                  "leapfrog_halfstep"),
            ("repro.kernels.leapfrog", "leapfrog_halfstep_ref"), False, 1e-6),
+    OpSpec("leapfrog_halfstep_batch", ("repro.kernels.leapfrog",
+                                       "leapfrog_halfstep_batch"),
+           ("repro.kernels.leapfrog", "leapfrog_halfstep_batch_ref"),
+           False, 1e-6),
+    OpSpec("glm_potential_grad", ("repro.kernels.glm_potential",
+                                  "glm_potential_grad"),
+           ("repro.kernels.ref", "glm_potential_grad"), False, 5e-3),
+    OpSpec("mala_step", ("repro.kernels.rwm_mala", "mala_step"),
+           ("repro.kernels.ref", "mala_step"), False, 1e-6),
     OpSpec("enum_contract", ("repro.kernels.enum_contract", "enum_contract"),
            ("repro.kernels.ref", "enum_contract"), True, 0.0),
     OpSpec("rmsnorm", ("repro.kernels.rmsnorm", "rmsnorm"),
@@ -108,6 +117,41 @@ def leapfrog_halfstep(z, r, grad, m_inv, eps):
         return _k(z, r, grad, m_inv, eps, interpret=_STATE["interpret"])
     from .leapfrog import leapfrog_halfstep_ref
     return leapfrog_halfstep_ref(z, r, grad, m_inv, eps)
+
+
+def leapfrog_halfstep_batch(z, r, grad, m_inv, eps, kick=0.5):
+    """Chain-batched leapfrog kick+drift over a (C, D) ensemble (the ChEES
+    lockstep path).  ``kick=0.5`` is the classic half-kick; ``kick=1.0``
+    fuses the two adjacent half-kicks between interior trajectory steps.
+    One (C, D)-blocked HBM pass under Pallas; jnp reference otherwise."""
+    if _STATE["pallas"]:
+        from .leapfrog import leapfrog_halfstep_batch as _k
+        return _k(z, r, grad, m_inv, eps, kick,
+                  interpret=_STATE["interpret"])
+    from .leapfrog import leapfrog_halfstep_batch_ref
+    return leapfrog_halfstep_batch_ref(z, r, grad, m_inv, eps, kick)
+
+
+def glm_potential_grad(x, y, w, offset=None, scale=None,
+                       family="bernoulli_logit"):
+    """Fused GLM negative log-likelihood + gradient wrt ``w`` in one pass
+    over the (n, d) design matrix (the logreg/CoverType potential hot
+    path).  Under Pallas one HBM read of ``x`` serves value AND grad."""
+    if _STATE["pallas"]:
+        from .glm_potential import glm_potential_grad as _k
+        return _k(x, y, w, offset, scale, family,
+                  interpret=_STATE["interpret"])
+    return ref.glm_potential_grad(x, y, w, offset, scale, family)
+
+
+def mala_step(z, grad, noise, m_inv, eps):
+    """Batched Langevin proposal over a (C, D) ensemble; ``grad=None``
+    gives the symmetric random-walk proposal.  One (C, D)-blocked HBM
+    pass under Pallas; jnp reference otherwise."""
+    if _STATE["pallas"]:
+        from .rwm_mala import mala_step as _k
+        return _k(z, grad, noise, m_inv, eps, interpret=_STATE["interpret"])
+    return ref.mala_step(z, grad, noise, m_inv, eps)
 
 
 def enum_contract(log_alpha, log_mat):

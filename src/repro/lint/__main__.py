@@ -96,12 +96,21 @@ def _corpus_entries():
     yield ("examples/minibatch_svi.py:make_model(100)",
            mb.make_model(100), (mx,), {"y": my})
 
+    ml = _example("mala_logreg")
+    yield ("examples/mala_logreg.py:logistic_regression",
+           ml.logistic_regression, (x,), {"y": y})
+    my2 = random.normal(random.PRNGKey(2), (40,)) + 1.0
+    yield ("examples/mala_logreg.py:location_scale",
+           ml.location_scale, (), {"y": my2})
+
     yield ("benchmarks/models.py:hmm_model", bm.hmm_model,
            (bm.hmm_data(T=60, T_sup=20),), {})
     yield ("benchmarks/models.py:enum_hmm_model", bm.enum_hmm_model,
            (bm.enum_hmm_data(K=3, T=12),), {})
     cv = bm.covtype_data(n=200, d=8)
     yield ("benchmarks/models.py:logreg_model", bm.logreg_model,
+           (cv["x"],), {"y": cv["y"]})
+    yield ("benchmarks/models.py:logreg_model_glm", bm.logreg_model_glm,
            (cv["x"],), {"y": cv["y"]})
     sk = bm.skim_data(p=10)
     yield ("benchmarks/models.py:skim_model", bm.skim_model,

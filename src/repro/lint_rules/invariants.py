@@ -66,6 +66,23 @@ def _sample_inputs(name, key):
         z, r, g = (random.normal(k, (d,)) for k in ks[:3])
         m_inv = jnp.abs(random.normal(ks[3], (d,))) + 0.5
         return (z, r, g, m_inv, 0.1), {}
+    if name == "leapfrog_halfstep_batch":
+        c, d = 5, 515  # non-multiples of sublane/block: exercises padding
+        z, r, g = (random.normal(k, (c, d)) for k in ks[:3])
+        m_inv = jnp.abs(random.normal(ks[3], (d,))) + 0.5
+        return (z, r, g, m_inv, 0.1, 1.0), {}
+    if name == "glm_potential_grad":
+        n, d = 300, 7  # n spans >1 block row-group; d exercises lane padding
+        x = random.normal(ks[0], (n, d))
+        w = random.normal(ks[1], (d,)) * 0.3
+        y = (random.uniform(ks[2], (n,)) < 0.5).astype(jnp.float32)
+        offset = random.normal(ks[3], (n,)) * 0.1
+        return (x, y, w, offset), {"family": "bernoulli_logit"}
+    if name == "mala_step":
+        c, d = 5, 515
+        z, g, noise = (random.normal(k, (c, d)) for k in ks[:3])
+        m_inv = jnp.abs(random.normal(ks[3], (d,))) + 0.5
+        return (z, g, noise, m_inv, 0.05), {}
     if name == "enum_contract":
         return (random.normal(ks[0], (7,)),
                 random.normal(ks[1], (7, 5))), {}
@@ -161,7 +178,9 @@ def check_parity(spec, rng_key=None):
     findings = []
     if spec.pallas is None:
         return _result(findings)
-    inputs = _sample_inputs(spec.name, rng_key or random.PRNGKey(0))
+    if rng_key is None:
+        rng_key = random.PRNGKey(0)
+    inputs = _sample_inputs(spec.name, rng_key)
     if inputs is None:
         findings.append(_mk(
             "RPL203", spec.name,
@@ -222,7 +241,8 @@ def verify_kernel_setup(setup, state=None, num_chains=None):
     """RPL204: the KernelSetup field contract.
 
     ``state``/``num_chains`` optionally verify the cross-chain leaf
-    contract: ensemble state leaves must lead with the chain axis.
+    contract: matrix-shaped ensemble state leaves must lead with the chain
+    axis (scalars and vectors are shared pooled adaptation state).
     """
     findings = []
 
@@ -253,11 +273,16 @@ def verify_kernel_setup(setup, state=None, num_chains=None):
         bad("KernelSetup.cross_chain must be a bool.")
     if getattr(setup, "cross_chain", False) and state is not None \
             and num_chains is not None:
+        # Shared pooled state (iteration counter, rng key, step size, the
+        # (D,) mass diagonal / Welford moments) is scalar- or vector-shaped
+        # by construction; anything matrix-shaped is per-chain and must
+        # lead with the chain axis.
         for i, leaf in enumerate(jax.tree_util.tree_leaves(state)):
             shape = jnp.shape(leaf)
-            if not shape or shape[0] != num_chains:
-                bad(f"cross_chain state leaf {i} has shape {shape}; every "
-                    f"leaf must lead with the chain axis ({num_chains},).")
+            if len(shape) >= 2 and shape[0] != num_chains:
+                bad(f"cross_chain state leaf {i} has shape {shape}; "
+                    f"matrix-shaped ensemble leaves must lead with the "
+                    f"chain axis ({num_chains},).")
     return _result(findings)
 
 

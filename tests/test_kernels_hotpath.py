@@ -1,0 +1,376 @@
+"""Roofline hot-path kernels: fused GLM potential, chain-batched leapfrog
+megakernel, batched MALA/RWM proposals.
+
+Everything runs in Pallas interpret mode on CPU: the registry-driven parity
+sweep (RPL202/RPL203 over the whole OP_TABLE — new ops are picked up
+automatically), megakernel-vs-vmapped-halfstep equivalence on the ChEES
+path, GLM fused-potential exactness + structural fallback + compile-once
+behavior, and the MALA/RWM samplers through the unchanged executor
+(posterior sanity, RPL204 contract, bit-identical checkpoint/resume).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax, random
+
+import repro.core as pc
+from repro.core import dist
+from repro.core.infer import MALA, MCMC, NUTS, RWM, mrw_setup, nuts_setup
+from repro.core.infer.hmc_util import (
+    IntegratorState,
+    velocity_verlet,
+    velocity_verlet_batch,
+)
+from repro.core.infer.util import initialize_model_structure
+from repro.kernels import ops
+from repro.kernels.leapfrog import (
+    leapfrog_halfstep,
+    leapfrog_halfstep_batch,
+    leapfrog_halfstep_batch_ref,
+)
+from repro.lint_rules.invariants import (
+    check_parity,
+    check_signatures,
+    verify_kernel_setup,
+)
+
+pytestmark = pytest.mark.kernels
+
+
+# ---------------------------------------------------------------------------
+# registry-driven parity (RPL202/RPL203): every op, interpret mode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ops.OP_TABLE,
+                         ids=[s.name for s in ops.OP_TABLE])
+def test_registry_signatures(spec):
+    assert check_signatures(spec).findings == []
+
+
+@pytest.mark.parametrize("spec", ops.OP_TABLE,
+                         ids=[s.name for s in ops.OP_TABLE])
+def test_registry_parity_interpret(spec):
+    assert check_parity(spec, random.PRNGKey(7)).findings == []
+
+
+# ---------------------------------------------------------------------------
+# chain-batched leapfrog megakernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C,D", [(1, 64), (5, 515), (8, 128), (64, 16)])
+def test_megakernel_matches_vmapped_halfstep(C, D):
+    """(C, D) megakernel == per-chain vmap(fused halfstep) within 1e-6 —
+    the exact replacement made on the ChEES dense path."""
+    ks = random.split(random.PRNGKey(0), 4)
+    z, r, g = (random.normal(k, (C, D)) for k in ks[:3])
+    m_inv = jnp.abs(random.normal(ks[3], (D,))) + 0.5
+    eps = jnp.asarray(0.07)
+    zv, rv = jax.vmap(lambda zz, rr, gg: ops.leapfrog_halfstep(
+        zz, rr, gg, m_inv, eps))(z, r, g)
+    for pallas in (False, True):
+        with ops.use_pallas(pallas, interpret=True):
+            zb, rb = ops.leapfrog_halfstep_batch(z, r, g, m_inv, eps)
+        assert float(jnp.max(jnp.abs(zb - zv))) < 1e-6
+        assert float(jnp.max(jnp.abs(rb - rv))) < 1e-6
+
+
+def test_megakernel_full_kick_is_merged_halfkicks():
+    """kick=1.0 == two adjacent half-kicks with no drift in between."""
+    ks = random.split(random.PRNGKey(1), 4)
+    z, r, g = (random.normal(k, (4, 130)) for k in ks[:3])
+    m_inv = jnp.abs(random.normal(ks[3], (130,))) + 0.5
+    eps = 0.05
+    _, r_full = leapfrog_halfstep_batch_ref(z, r, g, m_inv, eps, kick=1.0)
+    np.testing.assert_allclose(np.asarray(r_full),
+                               np.asarray(r - eps * g), rtol=1e-6)
+    z_full, _ = leapfrog_halfstep_batch(z, r, g, m_inv, eps, kick=1.0,
+                                        interpret=True)
+    z_exp, _ = leapfrog_halfstep_batch_ref(z, r, g, m_inv, eps, kick=1.0)
+    assert float(jnp.max(jnp.abs(z_full - z_exp))) < 1e-6
+
+
+def test_leapfrog_block_kwarg_is_pure_tuning():
+    """The (bugfixed) trailing block kwarg changes tiling, not results."""
+    ks = random.split(random.PRNGKey(2), 4)
+    z, r, g = (random.normal(k, (515,)) for k in ks[:3])
+    m_inv = jnp.abs(random.normal(ks[3], (515,))) + 0.5
+    z1, r1 = leapfrog_halfstep(z, r, g, m_inv, 0.1, interpret=True)
+    z2, r2 = leapfrog_halfstep(z, r, g, m_inv, 0.1, block=128,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    zb1, _ = leapfrog_halfstep_batch(jnp.stack([z] * 3), jnp.stack([r] * 3),
+                                     jnp.stack([g] * 3), m_inv, 0.1,
+                                     interpret=True)
+    zb2, _ = leapfrog_halfstep_batch(jnp.stack([z] * 3), jnp.stack([r] * 3),
+                                     jnp.stack([g] * 3), m_inv, 0.1,
+                                     block=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(zb1), np.asarray(zb2))
+
+
+@pytest.mark.parametrize("num_steps", [1, 2, 7])
+def test_batched_trajectory_matches_vmapped_verlet(num_steps):
+    """velocity_verlet_batch (merged interior kicks) == the old
+    fori_loop(vmap(vv_update)) loop: exact leapfrog, same positions and
+    momenta up to float reassociation."""
+    C, D = 6, 37
+    pot = lambda z: 0.5 * jnp.dot(z * jnp.linspace(0.5, 2.0, D), z)  # noqa: E731
+    ks = random.split(random.PRNGKey(3), 2)
+    z, r = random.normal(ks[0], (C, D)), random.normal(ks[1], (C, D))
+    pe, grad = jax.vmap(jax.value_and_grad(pot))(z)
+    m_inv = jnp.abs(random.normal(random.PRNGKey(4), (D,))) + 0.5
+    eps = jnp.asarray(0.05)
+    state = IntegratorState(z, r, pe, grad)
+
+    _, vv_update = velocity_verlet(pot)
+    step_all = jax.vmap(lambda s: vv_update(eps, m_inv, s))
+    expected = lax.fori_loop(0, num_steps, lambda _, s: step_all(s), state)
+
+    trajectory = velocity_verlet_batch(pot)
+    got = jax.jit(lambda s, n: trajectory(eps, m_inv, s, n))(
+        state, jnp.asarray(num_steps))
+    for a, b in zip(got, expected):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                                   atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused GLM potential
+# ---------------------------------------------------------------------------
+
+
+def _logreg_pair(n=300, d=5):
+    ks = random.split(random.PRNGKey(5), 3)
+    x = random.normal(ks[0], (n, d))
+    w_true = random.normal(ks[1], (d,))
+    y = (random.uniform(ks[2], (n,))
+         < jax.nn.sigmoid(x @ w_true)).astype(jnp.float32)
+
+    def plain(x, y=None):
+        d = x.shape[-1]
+        w = pc.sample("w", dist.Normal(jnp.zeros(d),
+                                       jnp.ones(d)).to_event(1))
+        return pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y)
+
+    def glm(x, y=None):
+        d = x.shape[-1]
+        w = pc.sample("w", dist.Normal(jnp.zeros(d),
+                                       jnp.ones(d)).to_event(1))
+        return pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+                         infer={"potential": "glm"})
+
+    return plain, glm, x, y
+
+
+def test_glm_fused_potential_matches_plain():
+    """Fused potential == plain potential (value and gradient) everywhere,
+    including under jit+vmap — the custom_vjp backward is the kernel's own
+    residual product."""
+    plain, glm, x, y = _logreg_pair()
+    key = random.PRNGKey(0)
+    p_plain = initialize_model_structure(key, plain, (x,), {"y": y})[0]
+    p_glm = initialize_model_structure(key, glm, (x,), {"y": y})[0]
+    zs = random.normal(random.PRNGKey(6), (8, x.shape[1]))
+    v1, g1 = jax.jit(jax.vmap(jax.value_and_grad(p_plain)))(zs)
+    v2, g2 = jax.jit(jax.vmap(jax.value_and_grad(p_glm)))(zs)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_glm_normal_family_matches_plain():
+    ks = random.split(random.PRNGKey(7), 3)
+    x = random.normal(ks[0], (200, 4))
+    y = x @ random.normal(ks[1], (4,)) + 0.3 * random.normal(ks[2], (200,))
+
+    def plain(x, y=None):
+        d = x.shape[-1]
+        w = pc.sample("w", dist.Normal(jnp.zeros(d),
+                                       jnp.ones(d)).to_event(1))
+        return pc.sample("y", dist.Normal(x @ w, 0.3).to_event(1), obs=y)
+
+    def glm(x, y=None):
+        d = x.shape[-1]
+        w = pc.sample("w", dist.Normal(jnp.zeros(d),
+                                       jnp.ones(d)).to_event(1))
+        return pc.sample("y", dist.Normal(x @ w, 0.3).to_event(1), obs=y,
+                         infer={"potential": "glm"})
+
+    key = random.PRNGKey(0)
+    p_plain = initialize_model_structure(key, plain, (x,), {"y": y})[0]
+    p_glm = initialize_model_structure(key, glm, (x,), {"y": y})[0]
+    z = random.normal(random.PRNGKey(8), (4,))
+    v1, g1 = jax.value_and_grad(p_plain)(z)
+    v2, g2 = jax.value_and_grad(p_glm)(z)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_glm_nonaffine_predictor_falls_back_with_warning():
+    """A non-affine marked site must warn and keep exact plain semantics —
+    the fusion is an optimization, never a silent approximation."""
+    ks = random.split(random.PRNGKey(9), 2)
+    x = random.normal(ks[0], (100, 3))
+    y = (random.uniform(ks[1], (100,)) < 0.5).astype(jnp.float32)
+
+    def nonaffine(x, y=None):
+        d = x.shape[-1]
+        w = pc.sample("w", dist.Normal(jnp.zeros(d),
+                                       jnp.ones(d)).to_event(1))
+        return pc.sample("y", dist.Bernoulli(logits=x @ jnp.tanh(w)),
+                         obs=y, infer={"potential": "glm"})
+
+    def plain(x, y=None):
+        d = x.shape[-1]
+        w = pc.sample("w", dist.Normal(jnp.zeros(d),
+                                       jnp.ones(d)).to_event(1))
+        return pc.sample("y", dist.Bernoulli(logits=x @ jnp.tanh(w)),
+                         obs=y)
+
+    with pytest.warns(UserWarning, match="not affine"):
+        p_fused = initialize_model_structure(random.PRNGKey(0), nonaffine,
+                                             (x,), {"y": y})[0]
+    p_plain = initialize_model_structure(random.PRNGKey(0), plain, (x,),
+                                         {"y": y})[0]
+    z = random.normal(random.PRNGKey(1), (3,))
+    np.testing.assert_allclose(float(p_fused(z)), float(p_plain(z)),
+                               rtol=1e-6)
+
+
+def test_glm_nuts_setup_compile_once_across_arg_shapes():
+    """One GLM-potential NUTS setup compiles once per state shape; a second
+    setup at a different data shape is an independent cache entry and also
+    compiles once (the custom_vjp potential must not retrace per call)."""
+    for n in (150, 260):
+        _, glm, x, y = _logreg_pair(n=n, d=4)
+        setup = nuts_setup(random.PRNGKey(0), 10, model=glm,
+                           model_args=(x,), model_kwargs={"y": y})
+        n_traces = 0
+
+        def step(state, sample_fn=setup.sample_fn):
+            nonlocal n_traces
+            n_traces += 1
+            return sample_fn(state)
+
+        stepper = jax.jit(step)
+        state = setup.init_fn(random.PRNGKey(1))
+        s1 = stepper(state)
+        s2 = stepper(s1)
+        assert n_traces == 1, n
+        assert bool(jnp.isfinite(s2.potential_energy))
+
+
+def test_glm_nuts_posterior_matches_plain_nuts():
+    """Statistical acceptance: NUTS on the glm-marked model reproduces the
+    plain-model posterior (same data, same seeds)."""
+    plain, glm, x, y = _logreg_pair(n=250, d=3)
+    means = {}
+    for name, model in (("plain", plain), ("glm", glm)):
+        mcmc = MCMC(NUTS(model), num_warmup=300, num_samples=300,
+                    num_chains=2)
+        mcmc.run(random.PRNGKey(2), x, y=y)
+        means[name] = np.asarray(mcmc.get_samples()["w"].mean(0))
+    np.testing.assert_allclose(means["glm"], means["plain"], atol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# MALA / RWM through the unchanged executor
+# ---------------------------------------------------------------------------
+
+
+def _scalar_model():
+    def model():
+        pc.sample("x", dist.Normal(1.5, 2.0))
+    return model
+
+
+@pytest.mark.parametrize("kernel_cls", [MALA, RWM],
+                         ids=["mala", "rwm"])
+def test_mrw_posterior_sanity(kernel_cls):
+    mcmc = MCMC(kernel_cls(_scalar_model()), num_warmup=600,
+                num_samples=600, num_chains=16)
+    mcmc.run(random.PRNGKey(0))
+    xs = mcmc.get_samples()["x"]
+    assert xs.shape == (16 * 600,)
+    assert abs(float(xs.mean()) - 1.5) < 0.15
+    assert abs(float(xs.std()) - 2.0) < 0.2
+
+
+@pytest.mark.parametrize("algo,target", [("MALA", 0.574), ("RWM", 0.234)],
+                         ids=["mala", "rwm"])
+def test_mrw_adaptation_hits_target_accept(algo, target):
+    """Dual averaging controls the cross-chain *harmonic mean* acceptance
+    (worst chains dominate) — that statistic, not the arithmetic mean, must
+    land at the Roberts–Rosenthal target after warmup."""
+    def model():
+        pc.sample("v", dist.Normal(jnp.zeros(4), 2.0).to_event(1))
+
+    setup = mrw_setup(random.PRNGKey(0), 500, algo, model=model)
+    state = setup.init_fn(random.split(random.PRNGKey(1), 32))
+    step = jax.jit(setup.sample_fn)
+    hmeans = []
+    for t in range(800):
+        state = step(state)
+        if t >= 500:
+            ap = jnp.clip(state.accept_prob, min=1e-10)
+            hmeans.append(1.0 / float((1.0 / ap).mean()))
+    hmean = float(np.mean(hmeans))
+    assert abs(hmean - target) < 0.12, (algo, hmean)
+
+
+@pytest.mark.parametrize("algo", ["MALA", "RWM"])
+def test_mrw_kernel_setup_contract(algo):
+    """RPL204: the batch-aware contract, including cross-chain leaves."""
+    setup = mrw_setup(random.PRNGKey(0), 20, algo, model=_scalar_model())
+    state = setup.init_fn(random.split(random.PRNGKey(1), 4))
+    result = verify_kernel_setup(setup, state=state, num_chains=4)
+    assert result.findings == []
+
+
+@pytest.mark.parametrize("kernel_cls", [MALA, RWM], ids=["mala", "rwm"])
+def test_mrw_checkpoint_resume_mid_warmup_bit_identical(kernel_cls,
+                                                        tmp_path):
+    """Kill mid-warmup (pooled adaptation state lives only in the
+    checkpoint pytree), resume, and finish bit-identically — same
+    acceptance as the ChEES resume test, through the same executor."""
+    from repro.distributed import checkpoint as ckpt
+
+    def make():
+        return MCMC(kernel_cls(_scalar_model()), num_warmup=60,
+                    num_samples=80, num_chains=4)
+
+    ref_run = make()
+    ref_run.run(random.PRNGKey(9))
+    expected = np.asarray(ref_run.get_samples(group_by_chain=True)["x"])
+
+    ckdir = str(tmp_path / "mrw")
+    real_save, calls = ckpt.save, {"n": 0}
+
+    def killing_save(tree, directory, **kw):
+        real_save(tree, directory, **kw)
+        calls["n"] += 1
+        if calls["n"] == 2:   # state at iteration 50 — still in warmup
+            raise KeyboardInterrupt
+
+    ckpt.save = killing_save
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            make().run(random.PRNGKey(9), checkpoint_every=25,
+                       checkpoint_dir=ckdir)
+    finally:
+        ckpt.save = real_save
+
+    step = ckpt.latest_step(os.path.join(ckdir, "state"))
+    assert step is not None and step < 60, step   # mid-warmup
+
+    resumed = make()
+    resumed.run(random.PRNGKey(9), checkpoint_every=25,
+                checkpoint_dir=ckdir, resume=True)
+    got = np.asarray(resumed.get_samples(group_by_chain=True)["x"])
+    np.testing.assert_array_equal(got, expected)
