@@ -29,7 +29,8 @@ def _previous_headlines():
                        for m in ("ms_per_leapfrog", "ms_per_eff_sample",
                                  "wall_s")
                        if m in prev[k]}
-    for k in ("multichain", "svi_minibatch", "enum_hmm", "chees"):
+    for k in ("multichain", "svi_minibatch", "enum_hmm", "chees",
+              "sharded_potential"):
         if isinstance(prev.get(k), dict):
             keep[k] = {"rows": prev[k].get("rows")}
             if "ess_per_sec_ratio_at_max_chains" in prev[k]:
@@ -119,6 +120,13 @@ def main():
     out["kernels"] = kernels_bench.main(quick=quick)
 
     print("=" * 70)
+    print("Data-sharded GLM potential — ms/eval vs mesh data-axis size "
+          "(8 virtual devices, chains x data mesh)")
+    print("=" * 70, flush=True)
+    from benchmarks import sharded_potential
+    out["sharded_potential"] = sharded_potential.main(quick=quick)
+
+    print("=" * 70)
     print("Static analyzer — lint_ms on logreg (cost of validate=True)")
     print("=" * 70, flush=True)
     out["lint"] = _lint_bench()
@@ -140,10 +148,10 @@ def main():
         json.dump(out, f, indent=1)
     # per-PR snapshot: bench_summary.json is overwritten every run, the
     # BENCH_<n>.json files accumulate the trajectory
-    with open(os.path.join(RESULTS, "BENCH_7.json"), "w") as f:
+    with open(os.path.join(RESULTS, "BENCH_8.json"), "w") as f:
         json.dump(out, f, indent=1)
     print(f"\nall benchmarks done in {out['total_wall_s']:.0f}s; summary in "
-          f"{RESULTS}/bench_summary.json (snapshot: BENCH_7.json)")
+          f"{RESULTS}/bench_summary.json (snapshot: BENCH_8.json)")
 
 
 if __name__ == "__main__":

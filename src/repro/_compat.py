@@ -16,3 +16,27 @@ def make_mesh_axis_kwargs(n_axes: int) -> dict:
     if hasattr(jax.sharding, "AxisType"):
         return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
     return {}
+
+
+def ensure_optimization_barrier_batch_rule():
+    """Backport the ``optimization_barrier`` vmap batching rule.
+
+    jax 0.4.37 lowers ``lax.optimization_barrier`` but has no batching rule
+    for it, so the barrier cannot sit inside a ``vmap``-ed potential.  The
+    rule is trivially transparent (newer jax ships exactly this): bind the
+    primitive on the batched operands, keep every batch dim.  No-op once
+    the installed jax registers its own.
+    """
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:  # pragma: no cover - future jax reshuffles internals
+        return
+    if optimization_barrier_p in batching.primitive_batchers:
+        return
+
+    def _batch_rule(batched_args, batch_dims, **params):
+        return (optimization_barrier_p.bind(*batched_args, **params),
+                batch_dims)
+
+    batching.primitive_batchers[optimization_barrier_p] = _batch_rule

@@ -66,11 +66,13 @@ from .hmc_util import (
     build_adaptation_schedule,
     chain_mean,
     chain_sum,
+    chain_vmap,
     dual_averaging_init,
     dual_averaging_update,
     find_reasonable_step_size,
     kinetic_energy,
     momentum_sample,
+    shared_draw,
     velocity,
     velocity_verlet,
     velocity_verlet_batch,
@@ -165,7 +167,7 @@ def _make_init_fn(potential_fn, dim, *, z_fixed, adapt_step_size, step_size0,
             model_kwargs=model_kwargs, transforms=transforms)
 
     def init_fn(keys):
-        z, pe, grad = jax.vmap(one_chain)(keys)
+        z, pe, grad = chain_vmap(one_chain)(keys)
         num_chains = z.shape[0]
         _, shared = random.split(keys[0])
         shared, ss_key = random.split(shared)
@@ -217,7 +219,7 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, adapt_step_size,
         a dense mass matrix would fall back to the vmapped scalar step."""
         if imm.ndim == 1:
             return vv_trajectory(step_size, imm, istate, num_steps)
-        step_all = jax.vmap(lambda s: vv_update(step_size, imm, s))
+        step_all = chain_vmap(lambda s: vv_update(step_size, imm, s))
         return lax.fori_loop(0, num_steps, lambda _, s: step_all(s), istate)
 
     def chees_gradient(h, z0, z1, v1, weights):
@@ -325,8 +327,9 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, adapt_step_size,
             jnp.ceil(h * jnp.exp(adapt.log_traj) / step_size)
             .astype(jnp.int32), 1, max_num_steps)
 
-        r = jax.vmap(lambda k: momentum_sample(k, imm, state.z.dtype))(
-            mom_keys)
+        r = shared_draw(
+            jax.vmap(lambda k: momentum_sample(k, imm, state.z.dtype))(
+                mom_keys))
         energy_cur = state.potential_energy \
             + jax.vmap(lambda rr: kinetic_energy(imm, rr))(r)
         end = integrate(step_size, imm,
@@ -339,7 +342,8 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, adapt_step_size,
                           energy_new - energy_cur)
         accept_prob = jnp.clip(jnp.exp(-delta), max=1.0)
         diverging = delta > max_delta_energy
-        accept = jax.vmap(random.uniform)(acc_keys) < accept_prob
+        accept = shared_draw(jax.vmap(random.uniform)(acc_keys)) \
+            < accept_prob
         acc2 = accept[:, None]
         z = jnp.where(acc2, end.z, state.z)
         pe = jnp.where(accept, end.potential_energy, state.potential_energy)
@@ -389,7 +393,7 @@ def chees_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
                 adapt_trajectory=True,
                 target_accept_prob=DEFAULT_TARGET_ACCEPT,
                 learning_rate=0.05, max_num_steps=256,
-                init_strategy="uniform") -> KernelSetup:
+                init_strategy="uniform", data_shards=None) -> KernelSetup:
     """Build the static batch-aware :class:`KernelSetup` for ChEES-HMC.
 
     Same model-tracing preamble as :func:`~repro.core.infer.hmc.hmc_setup`;
@@ -397,13 +401,14 @@ def chees_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
     drives ``init_fn``/``sample_fn`` over the whole ``(num_chains, ...)``
     batch without an outer ``vmap``.
     """
-    from .hmc import flat_model_ingredients
+    from .hmc import flat_model_ingredients, resolve_data_axis
     model_kwargs = model_kwargs or {}
     (potential_flat, unravel, constrain, transforms, dim,
      z_fixed) = flat_model_ingredients(
         rng_key, model=model, potential_fn=potential_fn,
         init_params=init_params, model_args=model_args,
-        model_kwargs=model_kwargs)
+        model_kwargs=model_kwargs, data_shards=data_shards)
+    data_axis = resolve_data_axis(potential_flat, data_shards)
 
     schedule = build_adaptation_schedule(num_warmup)
     init_fn = _make_init_fn(
@@ -423,7 +428,7 @@ def chees_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo="ChEES",
         adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
-        cross_chain=True)
+        cross_chain=True, data_axis=data_axis)
 
 
 def chees_init(rng_key, num_warmup, num_chains, **kwargs):
@@ -447,7 +452,7 @@ class ChEES:
                  adapt_trajectory=True,
                  target_accept_prob=DEFAULT_TARGET_ACCEPT,
                  learning_rate=0.05, max_num_steps=256,
-                 init_strategy="uniform"):
+                 init_strategy="uniform", data_shards=None):
         self.model = model
         self.potential_fn = potential_fn
         self._step_size = step_size
@@ -458,6 +463,7 @@ class ChEES:
         self._learning_rate = learning_rate
         self._max_num_steps = max_num_steps
         self._init_strategy = init_strategy
+        self._data_shards = data_shards
         self._setup: Optional[KernelSetup] = None
 
     def setup(self, rng_key, num_warmup, init_params=None, model_args=(),
@@ -473,7 +479,8 @@ class ChEES:
             target_accept_prob=self._target,
             learning_rate=self._learning_rate,
             max_num_steps=self._max_num_steps,
-            init_strategy=self._init_strategy)
+            init_strategy=self._init_strategy,
+            data_shards=self._data_shards)
         self._setup = setup
         return setup
 

@@ -47,12 +47,101 @@ def _fallback(name, reason):
     return None
 
 
+def _make_sharded_nll(x, y, offset, scale, family, data_shards):
+    """The data-shard-aware likelihood term: S static per-shard partials
+    combined with the ``hmc_util.chain_sum`` pairwise-tree fold.
+
+    The fold structure (``S = data_shards``) is baked in at setup time and
+    is identical in every chain method — what varies per compiled program
+    is only *where* the partials evaluate.  Without an active inference
+    mesh the S per-shard (value, grad) pairs are computed locally and
+    folded; with one (``distributed.sharding.use_inference_mesh``, entered
+    by the executor at trace time), each device computes its ``S / Sd``
+    local partials under ``shard_map``, ``all_gather``s the stacked rows in
+    shard order, and runs the *same* fold — slices and elementwise adds
+    only, so the result is bit-identical under every data-axis layout.
+
+    Gradients are wrapped in ``jax.custom_vjp`` with the backward pass
+    ``ct * folded_grad``: the per-shard kernel already produces the shard
+    gradient in its single pass, and folding those rows explicitly keeps
+    the gradient on the same bit-deterministic path — reverse-mode AD
+    *through* a ``shard_map``/``all_gather`` combine re-associates the
+    accumulation and breaks bit-identity.
+    """
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..._compat import ensure_optimization_barrier_batch_rule
+    from ...kernels.glm_potential import glm_potential_partials
+    from .hmc_util import chain_sum
+    ensure_optimization_barrier_batch_rule()
+    S = int(data_shards)
+
+    def _value_and_grad(zflat):
+        from repro.distributed.sharding import active_data_mesh
+        active = active_data_mesh()
+        if active is not None:
+            mesh, axis = active
+            sd = mesh.shape[axis]
+            if S % sd != 0:
+                from ..errors import ReproValueError
+                raise ReproValueError(
+                    f"potential has data_shards={S} but the active mesh "
+                    f"data axis has {sd} devices; the shard structure must "
+                    "split evenly across the mesh (pick data_shards as a "
+                    "multiple of the data-axis size).", code="RPL303")
+
+            def body(x_loc, y_loc, off_loc, z):
+                lv, lg = lax.optimization_barrier(glm_potential_partials(
+                    x_loc, y_loc, z, off_loc, scale, family,
+                    data_shards=S // sd))
+                # tiled gather preserves device (= shard) order, so the
+                # stacked rows match the local path's reshape order exactly
+                av = lax.all_gather(lv, axis, axis=0, tiled=True)
+                ag = lax.all_gather(lg, axis, axis=0, tiled=True)
+                return chain_sum(av), chain_sum(ag)
+
+            out = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(axis), P()),
+                out_specs=(P(), P()), check_rep=False)(x, y, offset, zflat)
+        else:
+            vals, grads = lax.optimization_barrier(glm_potential_partials(
+                x, y, zflat, offset, scale, family, data_shards=S))
+            out = chain_sum(vals), chain_sum(grads)
+        # identical fusion boundary in both branches: the shard_map edge
+        # already stops XLA from fusing (e.g. FMA-contracting) the fold's
+        # final add into downstream consumers, so the local path must stop
+        # it too or the two graphs round differently at the seam
+        return lax.optimization_barrier(out)
+
+    @jax.custom_vjp
+    def nll(zflat):
+        return _value_and_grad(zflat)[0]
+
+    def nll_fwd(zflat):
+        val, grad = _value_and_grad(zflat)
+        return val, grad
+
+    def nll_bwd(grad, ct):
+        return (ct * grad,)
+
+    nll.defvjp(nll_fwd, nll_bwd)
+    return nll
+
+
 def maybe_fuse_glm_potential(model, model_args, model_kwargs, transforms,
                              unravel_fn, flat_proto, model_trace,
-                             potential_flat):
+                             potential_flat, data_shards=None):
     """Return a fused flat potential function, or None to keep the plain
     one.  ``model`` is the (config_enumerate-wrapped) model whose trace is
-    ``model_trace``; verification runs on concrete arrays at setup time."""
+    ``model_trace``; verification runs on concrete arrays at setup time.
+
+    ``data_shards=S`` additionally gives the likelihood term a static
+    S-shard fold structure (see :func:`_make_sharded_nll`) and marks the
+    returned potential with ``potential.data_shards = S`` so the executor
+    and RPL204 can see it is shard-aware."""
     marked = [name for name, site in model_trace.items()
               if site["type"] == "sample" and site["is_observed"]
               and site["infer"].get("potential") == "glm"]
@@ -126,20 +215,30 @@ def maybe_fuse_glm_potential(model, model_args, model_kwargs, transforms,
         return _fallback(name, f"predictor extraction failed "
                          f"({type(e).__name__}: {e})")
 
-    @jax.custom_vjp
-    def nll(zflat):
-        return ops.glm_potential_grad(x, y, zflat, offset, scale,
-                                      family)[0]
+    if data_shards is not None:
+        S = int(data_shards)
+        if S < 1:
+            return _fallback(name, f"data_shards={data_shards} is not a "
+                             "positive shard count")
+        if y.shape[0] % S != 0:
+            return _fallback(name, f"n={y.shape[0]} observations do not "
+                             f"split into data_shards={S} equal shards")
+        nll = _make_sharded_nll(x, y, offset, scale, family, S)
+    else:
+        @jax.custom_vjp
+        def nll(zflat):
+            return ops.glm_potential_grad(x, y, zflat, offset, scale,
+                                          family)[0]
 
-    def nll_fwd(zflat):
-        val, grad = ops.glm_potential_grad(x, y, zflat, offset, scale,
-                                           family)
-        return val, grad
+        def nll_fwd(zflat):
+            val, grad = ops.glm_potential_grad(x, y, zflat, offset, scale,
+                                               family)
+            return val, grad
 
-    def nll_bwd(grad, ct):
-        return (ct * grad,)
+        def nll_bwd(grad, ct):
+            return (ct * grad,)
 
-    nll.defvjp(nll_fwd, nll_bwd)
+        nll.defvjp(nll_fwd, nll_bwd)
 
     from .util import potential_energy
     prior_model = block(model, hide=[name])
@@ -158,4 +257,8 @@ def maybe_fuse_glm_potential(model, model_args, model_kwargs, transforms,
     except Exception as e:  # noqa: BLE001
         return _fallback(name, f"fused potential verification failed "
                          f"({type(e).__name__}: {e})")
+    if data_shards is not None:
+        # marker the setup layer / RPL204 use to tell shard-aware potentials
+        # from monolithic ones (see kernel_api.KernelSetup.data_axis)
+        fused_potential.data_shards = int(data_shards)
     return fused_potential

@@ -28,6 +28,7 @@ from .hmc_util import (
     WelfordState,
     build_adaptation_schedule,
     build_tree,
+    chain_vmap,
     dual_averaging_init,
     dual_averaging_update,
     find_reasonable_step_size,
@@ -264,17 +265,23 @@ def _collect_fn(state: HMCState):
 
 def flat_model_ingredients(rng_key, *, model=None, potential_fn=None,
                            init_params=None, model_args=(),
-                           model_kwargs=None):
+                           model_kwargs=None, data_shards=None):
     """One-time Python-level work shared by every gradient-based kernel:
     trace the model (or accept a raw ``potential_fn``) and return
     ``(potential_flat, unravel, constrain, transforms, dim, z_fixed)``
-    operating on the flat unconstrained vector."""
+    operating on the flat unconstrained vector.
+
+    ``data_shards=S`` requests a shard-aware potential (S-shard static fold;
+    see :mod:`repro.core.infer.glm`) — only honoured in model mode for a
+    model whose likelihood fuses; the setup layer raises RPL302 when the
+    request cannot be satisfied."""
     model_kwargs = model_kwargs or {}
     transforms = None
     if model is not None:
         (potential_flat, unravel, transforms, constrain, tr,
          flat_proto) = initialize_model_structure(rng_key, model, model_args,
-                                                  model_kwargs)
+                                                  model_kwargs,
+                                                  data_shards=data_shards)
         dim = flat_proto.shape[0]
         z_fixed = None
         if init_params is not None:
@@ -293,13 +300,45 @@ def flat_model_ingredients(rng_key, *, model=None, potential_fn=None,
     return potential_flat, unravel, constrain, transforms, dim, z_fixed
 
 
+def resolve_data_axis(potential_flat, data_shards):
+    """``KernelSetup.data_axis`` for a potential built with ``data_shards``.
+
+    ``data_shards=None`` -> ``None`` (monolithic potential).  Otherwise the
+    potential MUST carry the shard-aware fold marker set by
+    ``glm.maybe_fuse_glm_potential`` — a raw ``potential_fn`` or a model
+    whose likelihood fell back to the plain path has no per-shard structure,
+    and silently annotating it would let the executor activate a data mesh
+    under a potential that evaluates every row on every device (or worse,
+    double-counts the likelihood).  Raises RPL302 instead.
+    """
+    if data_shards is None:
+        return None
+    marker = getattr(potential_flat, "data_shards", None)
+    if marker is None:
+        from ..errors import ReproValueError
+        raise ReproValueError(
+            f"data_shards={data_shards} was requested but no shard-aware "
+            "potential was built: the model's likelihood did not fuse "
+            "(watch for the fallback warning), or a raw potential_fn was "
+            "passed.  Data-sharded inference needs the fused GLM potential "
+            "(mark the observed site with infer={'potential': 'glm'}).",
+            code="RPL302")
+    if int(marker) != int(data_shards):
+        from ..errors import ReproValueError
+        raise ReproValueError(
+            f"potential carries data_shards={marker} but the kernel was "
+            f"asked for data_shards={data_shards}.", code="RPL302")
+    from ...distributed.sharding import DATA_AXIS
+    return DATA_AXIS
+
+
 def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
               init_params=None, model_args=(), model_kwargs=None,
               algo="HMC", step_size=1.0, trajectory_length=2 * jnp.pi,
               adapt_step_size=True, adapt_mass_matrix=True, dense_mass=False,
               target_accept_prob=0.8, max_tree_depth=10,
               init_strategy="uniform",
-              cross_chain_adapt=False) -> KernelSetup:
+              cross_chain_adapt=False, data_shards=None) -> KernelSetup:
     """Build the static :class:`KernelSetup` for HMC (``algo="HMC"``) or
     NUTS (``algo="NUTS"``).
 
@@ -322,7 +361,8 @@ def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
      z_fixed) = flat_model_ingredients(
         rng_key, model=model, potential_fn=potential_fn,
         init_params=init_params, model_args=model_args,
-        model_kwargs=model_kwargs)
+        model_kwargs=model_kwargs, data_shards=data_shards)
+    data_axis = resolve_data_axis(potential_flat, data_shards)
 
     schedule = build_adaptation_schedule(num_warmup)
     init_fn = _make_init_fn(
@@ -347,7 +387,7 @@ def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo=algo,
         adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
-        cross_chain=cross_chain_adapt)
+        cross_chain=cross_chain_adapt, data_axis=data_axis)
 
 
 def _cross_chain_wrap(chain_init_fn, chain_sample_fn, schedule, num_warmup,
@@ -365,10 +405,10 @@ def _cross_chain_wrap(chain_init_fn, chain_sample_fn, schedule, num_warmup,
     _, window_end_is_middle = window_predicates(schedule)
 
     def init_fn(keys):
-        return jax.vmap(chain_init_fn)(keys)
+        return chain_vmap(chain_init_fn)(keys)
 
     def sample_fn(states: HMCState) -> HMCState:
-        states = jax.vmap(chain_sample_fn)(states)
+        states = chain_vmap(chain_sample_fn)(states)
         if not pool_mass:
             return states
         # iteration just completed (i was incremented by the transition)
@@ -425,7 +465,7 @@ class HMC:
                  trajectory_length=2 * jnp.pi, adapt_step_size=True,
                  adapt_mass_matrix=True, dense_mass=False,
                  target_accept_prob=0.8, init_strategy="uniform",
-                 cross_chain_adapt=False):
+                 cross_chain_adapt=False, data_shards=None):
         self.model = model
         self.potential_fn = potential_fn
         self._step_size = step_size
@@ -436,6 +476,7 @@ class HMC:
         self._target = target_accept_prob
         self._init_strategy = init_strategy
         self._cross_chain_adapt = cross_chain_adapt
+        self._data_shards = data_shards
         self._algo = "HMC"
         self._max_tree_depth = 10
         self._setup: Optional[KernelSetup] = None
@@ -457,7 +498,8 @@ class HMC:
             target_accept_prob=self._target,
             max_tree_depth=self._max_tree_depth,
             init_strategy=self._init_strategy,
-            cross_chain_adapt=self._cross_chain_adapt)
+            cross_chain_adapt=self._cross_chain_adapt,
+            data_shards=self._data_shards)
 
     # -- legacy API ----------------------------------------------------------
     def init(self, rng_key, num_warmup, init_params=None, model_args=(),
@@ -497,13 +539,14 @@ class NUTS(HMC):
                  adapt_step_size=True, adapt_mass_matrix=True,
                  dense_mass=False, target_accept_prob=0.8,
                  max_tree_depth=10, init_strategy="uniform",
-                 cross_chain_adapt=False):
+                 cross_chain_adapt=False, data_shards=None):
         super().__init__(model=model, potential_fn=potential_fn,
                          step_size=step_size, adapt_step_size=adapt_step_size,
                          adapt_mass_matrix=adapt_mass_matrix,
                          dense_mass=dense_mass,
                          target_accept_prob=target_accept_prob,
                          init_strategy=init_strategy,
-                         cross_chain_adapt=cross_chain_adapt)
+                         cross_chain_adapt=cross_chain_adapt,
+                         data_shards=data_shards)
         self._algo = "NUTS"
         self._max_tree_depth = max_tree_depth

@@ -100,7 +100,7 @@ def velocity_verlet_batch(potential_fn):
     """
     from repro.kernels import ops
 
-    pe_and_grad = jax.vmap(jax.value_and_grad(potential_fn))
+    pe_and_grad = chain_vmap(jax.value_and_grad(potential_fn))
 
     def trajectory(step_size, inverse_mass_matrix, state: IntegratorState,
                    num_steps):
@@ -176,6 +176,61 @@ def welford_update(state: WelfordState, x):
     else:
         m2 = m2 + jnp.outer(delta_post, delta_pre)
     return WelfordState(mean, m2, n)
+
+
+def chain_vmap(f):
+    """``jax.vmap`` over the leading chain axis, inference-mesh-aware.
+
+    When the executor has activated a 2-D ``("chains", "data")`` mesh
+    (:func:`repro.distributed.sharding.use_inference_mesh`, read at trace
+    time), the vmap carries ``spmd_axis_name="chains"`` so the batch
+    dimension stays *sharded* over the chain axis through any ``shard_map``
+    inside ``f`` — without it, GSPMD treats the batched dim as replicated
+    at the shard_map boundary, gathers the chains, and the resulting
+    resharding seam perturbs fusion enough to break bit-identity with the
+    unsharded layouts.  With no active mesh this is exactly ``jax.vmap``.
+
+    The mesh decision is deferred to call (= trace) time, so closures built
+    at setup time stay mesh-agnostic.
+    """
+    def batched(*args):
+        from repro.distributed.sharding import CHAIN_AXIS, active_data_mesh
+        active = active_data_mesh()
+        if active is not None and CHAIN_AXIS in active[0].axis_names:
+            return jax.vmap(f, spmd_axis_name=CHAIN_AXIS)(*args)
+        return jax.vmap(f)(*args)
+
+    return batched
+
+
+def shared_draw(x):
+    """Pin a shared-key ensemble RNG draw to the replicated layout.
+
+    Cross-chain kernels draw chain-batched randomness from one shared key —
+    ``random.normal(key, (C, D))`` or a ``vmap`` over ``random.split(key,
+    C)``.  jax's default (non-partitionable) threefry lowering pairs flat
+    counter indices ``(i, i + n/2)``; when GSPMD partitions that flat range
+    over a 2-D inference mesh the pairing crosses shard boundaries and the
+    rewritten computation generates *different bits* than the unsharded
+    graph — not an ULP fusion effect, a different random stream.  Pinning
+    the draw's layout to fully-replicated makes every device compute the
+    whole (tiny, O(C·D)) draw exactly as the single-device graph does;
+    downstream consumers re-slice it.
+
+    The trailing ``optimization_barrier`` fires in *every* graph (mesh or
+    not): the replication constraint is itself a fusion boundary, so the
+    unsharded graphs need the same boundary or the draw's consumers fuse
+    (FMA-contract) differently and drift at ULP level.
+    """
+    from repro._compat import ensure_optimization_barrier_batch_rule
+    from repro.distributed.sharding import active_data_mesh
+    ensure_optimization_barrier_batch_rule()
+    active = active_data_mesh()
+    if active is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(active[0], PartitionSpec()))
+    return jax.lax.optimization_barrier(x)
 
 
 def chain_sum(x):

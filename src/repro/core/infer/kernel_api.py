@@ -46,7 +46,8 @@ migration note).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Protocol, Tuple, runtime_checkable
+from typing import (Any, Callable, NamedTuple, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 
 class KernelSetup(NamedTuple):
@@ -74,6 +75,17 @@ class KernelSetup(NamedTuple):
     # shared) — the executor skips its outer vmap so the kernel may reduce
     # across chains.  Per-chain kernels leave the default False.
     cross_chain: bool = False
+    # data-sharding annotation: the mesh axis name (normally "data") the
+    # potential's per-shard partial log-likelihoods may be distributed over,
+    # or None for a monolithic potential.  The kernel stays pure and
+    # mesh-agnostic — ``potential_fn`` carries a static ``data_shards`` fold
+    # structure (S per-shard (value, grad) partials combined with the
+    # hmc_util.chain_sum pairwise-tree fold, the same graph whether the
+    # shards evaluate locally or under shard_map) and the *executor* decides
+    # per compiled program whether a mesh with this axis is active (see
+    # repro.distributed.sharding.use_inference_mesh).  RPL204 verifies that
+    # a setup declaring data_axis has a shard-aware potential.
+    data_axis: Optional[str] = None
 
 
 def init_state(setup: KernelSetup, rng_key):

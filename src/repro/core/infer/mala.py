@@ -39,8 +39,10 @@ from .hmc_util import (
     WelfordState,
     build_adaptation_schedule,
     chain_mean,
+    chain_vmap,
     dual_averaging_init,
     dual_averaging_update,
+    shared_draw,
     welford_batch,
     welford_combine,
     welford_covariance,
@@ -97,7 +99,7 @@ def _make_init_fn(potential_fn, dim, *, z_fixed, step_size0, init_strategy,
             model_kwargs=model_kwargs, transforms=transforms)
 
     def init_fn(keys):
-        z, pe, grad = jax.vmap(one_chain)(keys)
+        z, pe, grad = chain_vmap(one_chain)(keys)
         num_chains = z.shape[0]
         _, shared = random.split(keys[0])
         step_size = jnp.asarray(step_size0, jnp.float32)
@@ -120,7 +122,7 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, algo, *,
                     adapt_step_size, adapt_mass_matrix, target_accept_prob):
     """Pure ensemble transition ``MRWState -> MRWState``."""
     in_middle_window, window_end_is_middle = window_predicates(schedule)
-    pe_and_grad = jax.vmap(jax.value_and_grad(potential_fn))
+    pe_and_grad = chain_vmap(jax.value_and_grad(potential_fn))
     use_grad = algo == "MALA"
 
     def adapt_update(adapt: MRWAdaptState, t, z_next,
@@ -175,7 +177,7 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, algo, *,
         adapt = state.adapt_state
         minv, eps = adapt.inverse_mass_matrix, adapt.step_size
 
-        noise = random.normal(key_noise, state.z.shape)
+        noise = shared_draw(random.normal(key_noise, state.z.shape))
         z_new = ops.mala_step(state.z, state.z_grad if use_grad else None,
                               noise, minv, eps)
         pe_new, grad_new = pe_and_grad(z_new)
@@ -191,7 +193,8 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, algo, *,
         diverging = ~jnp.isfinite(pe_new)
         log_accept = jnp.where(diverging, -jnp.inf, log_accept)
         accept_prob = jnp.clip(jnp.exp(log_accept), max=1.0)
-        accept = jax.vmap(random.uniform)(acc_keys) < accept_prob
+        accept = shared_draw(jax.vmap(random.uniform)(acc_keys)) \
+            < accept_prob
         acc2 = accept[:, None]
         z = jnp.where(acc2, z_new, state.z)
         pe = jnp.where(accept, pe_new, state.potential_energy)
@@ -235,14 +238,14 @@ def mrw_setup(rng_key, num_warmup, algo, *, model=None, potential_fn=None,
               init_params=None, model_args=(), model_kwargs=None,
               step_size=0.1, adapt_step_size=True, adapt_mass_matrix=True,
               target_accept_prob=None,
-              init_strategy="uniform") -> KernelSetup:
+              init_strategy="uniform", data_shards=None) -> KernelSetup:
     """Build the static batch-aware :class:`KernelSetup` for MALA or RWM.
 
     Same model-tracing preamble as :func:`~repro.core.infer.hmc.hmc_setup`;
     ``cross_chain=True`` so the unified executor drives the whole
     ``(num_chains, ...)`` ensemble without an outer ``vmap``.
     """
-    from .hmc import flat_model_ingredients
+    from .hmc import flat_model_ingredients, resolve_data_axis
     if algo not in ("MALA", "RWM"):
         raise ValueError(f"algo must be 'MALA' or 'RWM', got {algo!r}")
     if target_accept_prob is None:
@@ -252,7 +255,8 @@ def mrw_setup(rng_key, num_warmup, algo, *, model=None, potential_fn=None,
      z_fixed) = flat_model_ingredients(
         rng_key, model=model, potential_fn=potential_fn,
         init_params=init_params, model_args=model_args,
-        model_kwargs=model_kwargs)
+        model_kwargs=model_kwargs, data_shards=data_shards)
+    data_axis = resolve_data_axis(potential_flat, data_shards)
 
     schedule = build_adaptation_schedule(num_warmup)
     init_fn = _make_init_fn(
@@ -269,7 +273,7 @@ def mrw_setup(rng_key, num_warmup, algo, *, model=None, potential_fn=None,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo=algo,
         adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
-        cross_chain=True)
+        cross_chain=True, data_axis=data_axis)
 
 
 class _MRWKernel:
@@ -279,7 +283,8 @@ class _MRWKernel:
 
     def __init__(self, model=None, potential_fn=None, step_size=0.1,
                  adapt_step_size=True, adapt_mass_matrix=True,
-                 target_accept_prob=None, init_strategy="uniform"):
+                 target_accept_prob=None, init_strategy="uniform",
+                 data_shards=None):
         self.model = model
         self.potential_fn = potential_fn
         self._step_size = step_size
@@ -287,6 +292,7 @@ class _MRWKernel:
         self._adapt_mass_matrix = adapt_mass_matrix
         self._target = target_accept_prob
         self._init_strategy = init_strategy
+        self._data_shards = data_shards
         self._setup: Optional[KernelSetup] = None
 
     def setup(self, rng_key, num_warmup, init_params=None, model_args=(),
@@ -299,7 +305,8 @@ class _MRWKernel:
             adapt_step_size=self._adapt_step_size,
             adapt_mass_matrix=self._adapt_mass_matrix,
             target_accept_prob=self._target,
-            init_strategy=self._init_strategy)
+            init_strategy=self._init_strategy,
+            data_shards=self._data_shards)
         self._setup = setup
         return setup
 

@@ -8,7 +8,12 @@ Chains are always a batch: ``init_fn``/``sample_fn`` from the kernel's
 - ``vectorized`` — the batched program on one device (paper Sec 3.2);
 - ``parallel``  — the *same* program with the chain axis sharded over a
   1-D ``chains`` mesh: thousands of chains spread over a pod with zero
-  change to kernel code;
+  change to kernel code.  ``mesh_shape=(Sc, Sd)`` upgrades it to the 2-D
+  ``("chains", "data")`` mesh: chains stay GSPMD-sharded on the first axis
+  while a shard-aware potential (``KernelSetup.data_axis``, see
+  ``docs/distributed.md``) evaluates its per-shard partial likelihoods
+  under ``shard_map`` over the second — sample streams stay bit-identical
+  across all three layouts because the fold structure is static;
 - ``sequential`` — the same compiled batch-size-1 program invoked per
   chain (bounded memory), results stacked host-side.
 
@@ -44,6 +49,7 @@ from jax import lax, random
 
 from .diagnostics import print_summary
 from .hmc import HMC, HMCState  # noqa: F401  (re-exported legacy surface)
+from .hmc_util import chain_vmap
 from .kernel_api import KernelSetup
 
 _SAMPLES_DIR_RE = re.compile(r"^samples_(\d+)_(\d+)$")
@@ -79,7 +85,7 @@ class MCMC:
                  num_chains: int = 1, thinning: int = 1,
                  chain_method: str = "vectorized", progress: bool = False,
                  collect_fields=("z",), jit_model_args: bool = False,
-                 validate: bool = False):
+                 validate: bool = False, mesh_shape=None):
         self.kernel = kernel
         # validate=True lints the kernel's model once per fresh setup (a
         # pure Python pre-compile pass; the warm sampling path is untouched)
@@ -91,6 +97,23 @@ class MCMC:
         if chain_method not in ("vectorized", "sequential", "parallel"):
             raise ValueError(f"unknown chain_method {chain_method}")
         self.chain_method = chain_method
+        # 2-D (chains, data) inference mesh for chain_method="parallel":
+        # chains stay GSPMD-sharded on the first axis (same compiled graph
+        # as vectorized/1-D — the bit-identity invariant), a shard-aware
+        # potential (KernelSetup.data_axis) evaluates data-parallel over the
+        # second.  None keeps the legacy 1-D chains-only mesh.
+        if mesh_shape is not None:
+            if chain_method != "parallel":
+                raise ValueError(
+                    "mesh_shape is only meaningful with "
+                    "chain_method='parallel'")
+            mesh_shape = tuple(int(v) for v in mesh_shape)
+            if len(mesh_shape) != 2:
+                raise ValueError(
+                    f"mesh_shape must be a (chains, data) pair, got "
+                    f"{mesh_shape}")
+        self.mesh_shape = mesh_shape
+        self._mesh = None          # lazily built inference mesh
         self.progress = bool(progress)
         self._divergences = 0   # cumulative, reported by progress lines
         self.collect_fields = collect_fields
@@ -117,24 +140,24 @@ class MCMC:
         all-reduces under ``chain_method="parallel"``).  Collected draws come
         out as ``(chains, draws, ...)`` either way.
         """
-        key = (kind, setup, length)
+        key = (kind, setup, length, self.mesh_shape)
         fn = self._exec_cache.get(key)
         if fn is not None:
             return fn
         if kind == "init":
             if setup.cross_chain:
-                fn = jax.jit(setup.init_fn)
+                prog = setup.init_fn
             else:
-                fn = jax.jit(lambda keys: jax.vmap(setup.init_fn)(keys))
+                prog = lambda keys: chain_vmap(setup.init_fn)(keys)  # noqa: E731
         elif kind == "warmup":
             def warm_scan(state):
                 return lax.scan(lambda s, _: (setup.sample_fn(s), None),
                                 state, None, length=length)[0]
 
             if setup.cross_chain:
-                fn = jax.jit(warm_scan)
+                prog = warm_scan
             else:
-                fn = jax.jit(lambda states: jax.vmap(warm_scan)(states))
+                prog = lambda states: chain_vmap(warm_scan)(states)  # noqa: E731
         elif kind == "sample":
             def body(s, _):
                 s = setup.sample_fn(s)
@@ -148,16 +171,40 @@ class MCMC:
                         lambda x: jnp.swapaxes(x, 0, 1), out)
                     return state, out
 
-                fn = jax.jit(whole)
+                prog = whole
             else:
                 def one_sample(state):
                     return lax.scan(body, state, None, length=length)
 
-                fn = jax.jit(lambda states: jax.vmap(one_sample)(states))
+                prog = lambda states: chain_vmap(one_sample)(states)  # noqa: E731
         else:
             raise ValueError(kind)
+        fn = jax.jit(self._with_mesh(setup, prog))
         self._exec_cache[key] = fn
         return fn
+
+    def _with_mesh(self, setup, prog):
+        """Activate the inference mesh for ``prog``'s trace when the kernel
+        declares a data-shardable potential under ``chain_method="parallel"``.
+
+        The ``with`` runs at trace time (inside the jitted callable), so the
+        potential closure reads the mesh via
+        ``repro.distributed.sharding.active_data_mesh`` while the program is
+        being traced — the compiled executable is mesh-specialized but the
+        KernelSetup stays mesh-agnostic and hashable.
+        """
+        if self.chain_method != "parallel" or setup.data_axis is None:
+            return prog
+        mesh = self._inference_mesh()
+        if setup.data_axis not in mesh.axis_names:
+            return prog  # legacy 1-D chains mesh: potential folds locally
+        from repro.distributed.sharding import use_inference_mesh
+
+        def with_mesh(*args):
+            with use_inference_mesh(mesh, setup.data_axis):
+                return prog(*args)
+
+        return with_mesh
 
     # -- setup ---------------------------------------------------------------
     def _get_setup(self, rng_key, init_params, model_args,
@@ -195,16 +242,21 @@ class MCMC:
             warnings.warn(str(finding), stacklevel=3)
         result.raise_if_errors()
 
+    def _inference_mesh(self):
+        """The (cached) device mesh for ``chain_method="parallel"``:
+        legacy 1-D ``("chains",)`` when ``mesh_shape`` is None, the 2-D
+        ``("chains", "data")`` mesh otherwise (RPL301 if it doesn't fit —
+        see :func:`repro.launch.mesh.make_inference_mesh`)."""
+        if self._mesh is None:
+            from repro.launch.mesh import make_inference_mesh
+            self._mesh = make_inference_mesh(self.num_chains,
+                                             self.mesh_shape)
+        return self._mesh
+
     def _chains_sharding(self):
-        n_dev = len(jax.devices())
-        use = max(d for d in range(1, n_dev + 1)
-                  if self.num_chains % d == 0)
-        from repro._compat import make_mesh_axis_kwargs
-        mesh = jax.make_mesh((use,), ("chains",),
-                             devices=jax.devices()[:use],
-                             **make_mesh_axis_kwargs(1))
         from jax.sharding import NamedSharding, PartitionSpec
-        return NamedSharding(mesh, PartitionSpec("chains"))
+        return NamedSharding(self._inference_mesh(),
+                             PartitionSpec("chains"))
 
     def _shard_tree(self, tree):
         """Device-put a state/collected pytree for ``chain_method="parallel"``:
@@ -252,11 +304,18 @@ class MCMC:
             ckpt.save(chunk,
                       os.path.join(directory, f"samples_{start:06d}_{end:06d}"),
                       step=end)
+        # mesh provenance is diagnostic only: arrays are saved in logical
+        # (unsharded) layout, so restore is mesh-agnostic — an elastic
+        # resume onto a different device count/mesh never consults these
         ckpt.save({"chain_state": states}, os.path.join(directory, "state"),
                   step=done,
                   extra={"num_warmup": self.num_warmup,
                          "num_samples": self.num_samples,
-                         "num_chains": self.num_chains})
+                         "num_chains": self.num_chains,
+                         "chain_method": self.chain_method,
+                         "mesh_shape": (list(self.mesh_shape)
+                                        if self.mesh_shape else None),
+                         "num_devices": len(jax.devices())})
 
     def _restore_checkpoint(self, directory, setup, keys):
         """Returns (states, collected_or_None, done) or None if no
@@ -365,6 +424,19 @@ class MCMC:
             raise ValueError("resume=True requires checkpoint_dir")
         setup = self._get_setup(rng_key, init_params, model_args,
                                 model_kwargs)
+        if self.chain_method == "parallel" and setup.data_axis is not None:
+            # eager shard/mesh fit check — the same condition would raise
+            # RPL303 mid-trace, this surfaces it before any compilation
+            mesh = self._inference_mesh()
+            shards = getattr(setup.potential_fn, "data_shards", None)
+            if (setup.data_axis in mesh.axis_names and shards is not None
+                    and shards % mesh.shape[setup.data_axis] != 0):
+                from ..errors import ReproValueError
+                raise ReproValueError(
+                    f"potential has data_shards={shards} but the mesh data "
+                    f"axis has {mesh.shape[setup.data_axis]} devices; pick "
+                    "data_shards as a multiple of the data-axis size.",
+                    code="RPL303")
         keys = random.split(rng_key, self.num_chains)
         self._divergences = 0
 

@@ -113,7 +113,7 @@ def potential_energy(model, model_args, model_kwargs, transforms, params_uncon):
 
 
 def initialize_model_structure(rng_key, model, model_args=(),
-                               model_kwargs=None):
+                               model_kwargs=None, data_shards=None):
     """One-time Python-level work: trace the model, build the flat-space
     closures.  No initial-point search — that part is pure and per-chain
     (:func:`find_valid_initial_params`), so a multi-chain driver runs this
@@ -155,10 +155,14 @@ def initialize_model_structure(rng_key, model, model_args=(),
     # Opt-in fused GLM likelihood (infer={"potential": "glm"} on an observed
     # site): one kernel pass serves potential value AND gradient.  Verified
     # structurally at setup; any surprise falls back to the plain closure.
+    # ``data_shards=S`` additionally requests the data-shard-aware fold
+    # structure on the fused likelihood (see glm._make_sharded_nll); the
+    # returned potential then carries a ``data_shards`` attribute the setup
+    # layer turns into KernelSetup.data_axis.
     from .glm import maybe_fuse_glm_potential
     fused = maybe_fuse_glm_potential(model, model_args, model_kwargs,
                                      transforms, unravel_fn, flat_proto, tr,
-                                     potential_flat)
+                                     potential_flat, data_shards=data_shards)
     if fused is not None:
         potential_flat = fused
 

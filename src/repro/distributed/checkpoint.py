@@ -12,6 +12,15 @@ manifest schema.
 
 MCMC kernels checkpoint their ``HMCState`` through the same functions, so a
 preempted chain resumes mid-stream (see core.infer.mcmc).
+
+Elastic-resume contract (docs/distributed.md): because every leaf is saved
+logical, an MCMC run checkpointed on one inference mesh (say 4 devices,
+``mesh_shape=(2, 2)``) restores onto any other device count — the executor
+re-places the restored state with ``_shard_tree`` under whatever mesh the
+resuming process built, and the continuation is *bit-identical* as long as
+the new layout preserves the compiled graph (chain count divisible by the
+new chain axis — RPL301 otherwise — and the potential's static
+``data_shards`` fold divisible by the new data axis — RPL303).
 """
 from __future__ import annotations
 

@@ -19,6 +19,7 @@ multi-pod ``(pod=2, data=16, model=16)``.  Design (DESIGN.md §6):
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from typing import TYPE_CHECKING
 
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -29,6 +30,72 @@ if TYPE_CHECKING:  # annotation-only: importing repro.models at runtime
 
 DP_AXES_1POD = ("data",)
 DP_AXES_MPOD = ("pod", "data")
+
+# Inference-mesh axis names: chains on one axis, the likelihood's data rows
+# on the other (see launch.mesh.make_inference_mesh and docs/distributed.md)
+CHAIN_AXIS = "chains"
+DATA_AXIS = "data"
+
+
+# ---------------------------------------------------------------------------
+# Inference mesh: trace-time context + placement rules
+# ---------------------------------------------------------------------------
+#
+# Kernels stay pure: a KernelSetup only *annotates* that its potential has a
+# data-shardable structure (``KernelSetup.data_axis``); which mesh — if any —
+# that axis maps onto is the executor's call, made per compiled program.  The
+# executor communicates it through this trace-time context: it enters
+# ``use_inference_mesh`` inside the function body it hands to ``jax.jit``, so
+# the ``with`` runs while the program is being traced and the potential
+# closure reads the active mesh via ``active_data_mesh`` — no mesh object
+# ever becomes part of the (hashable, mesh-agnostic) KernelSetup.
+
+_INFERENCE_CTX = {"mesh": None, "data_axis": None}
+
+
+@contextmanager
+def use_inference_mesh(mesh, data_axis=DATA_AXIS):
+    """Activate ``mesh`` for data-sharded potential evaluation.
+
+    Entered by the MCMC executor around the body of every compiled chunk
+    program (trace-time, like the kernels' ``use_pallas`` context); inert
+    for every other caller.
+    """
+    prev = dict(_INFERENCE_CTX)
+    _INFERENCE_CTX["mesh"] = mesh
+    _INFERENCE_CTX["data_axis"] = data_axis
+    try:
+        yield
+    finally:
+        _INFERENCE_CTX.update(prev)
+
+
+def active_data_mesh():
+    """``(mesh, data_axis)`` if a mesh with a data axis is active, else
+    ``None`` — the branch a shard-aware potential takes decides between its
+    ``shard_map`` path and the locally-unrolled fold of the *same* per-shard
+    subgraph (bit-identical either way; see docs/distributed.md)."""
+    mesh, axis = _INFERENCE_CTX["mesh"], _INFERENCE_CTX["data_axis"]
+    if mesh is None or axis is None or axis not in mesh.axis_names:
+        return None
+    return mesh, axis
+
+
+def chain_sharding(mesh):
+    """Placement for per-chain state leaves: sharded over the chain axis,
+    replicated over the data axis (chain state is (C, ...)-small; only the
+    likelihood's data rows ever occupy the data axis)."""
+    return NamedSharding(mesh, P(CHAIN_AXIS))
+
+
+def replicated_sharding(mesh):
+    """Placement for shared (cross-chain pooled) state leaves."""
+    return NamedSharding(mesh, P())
+
+
+def data_sharding(mesh, ndim=1):
+    """Placement for likelihood data rows: leading axis over ``data``."""
+    return NamedSharding(mesh, P(DATA_AXIS, *([None] * (ndim - 1))))
 
 
 def make_rules(cfg: ModelConfig, mesh, seq_parallel: bool = True,

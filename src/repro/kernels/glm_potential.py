@@ -101,3 +101,36 @@ def glm_potential_grad(x, y, w, offset=None, scale=None,
         interpret=interpret,
     )(scale_arr, x, y.reshape(-1, 1), offset.reshape(-1, 1), wp)
     return nll[0, 0].astype(w.dtype), grad[0, :d].astype(w.dtype)
+
+
+def glm_potential_partials(x, y, w, offset=None, scale=None,
+                           family="bernoulli_logit", *, data_shards=1):
+    """Per-shard partials of the fused GLM potential: split the n rows into
+    ``data_shards`` equal shards and run the one-pass kernel on each.
+
+    Returns ``(vals, grads)`` with shapes ``(S,)`` / ``(S, d)`` — row ``i``
+    is exactly ``glm_potential_grad`` of shard ``i``.  The loop is unrolled
+    so every shard executes the *same* unbatched subgraph: a device holding
+    ``k`` of the ``S`` shards under ``shard_map`` emits the identical
+    per-shard ops as a device holding all of them, which is what makes
+    folding the stacked rows with ``hmc_util.chain_sum`` bit-identical for
+    every data-axis layout (see ``repro.core.infer.glm``).
+    """
+    from . import ops
+    n, _ = x.shape
+    S = int(data_shards)
+    if n % S != 0:
+        raise ValueError(
+            f"n={n} rows do not split into data_shards={S} equal shards")
+    m = n // S
+    offset = jnp.zeros((n,), jnp.float32) if offset is None else offset
+    xs = x.reshape(S, m, x.shape[1])
+    ys = y.reshape(S, m)
+    offs = offset.reshape(S, m)
+    vals, grads = [], []
+    for i in range(S):
+        v, g = ops.glm_potential_grad(xs[i], ys[i], w, offs[i], scale,
+                                      family)
+        vals.append(v)
+        grads.append(g)
+    return jnp.stack(vals), jnp.stack(grads)

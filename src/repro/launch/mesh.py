@@ -26,3 +26,48 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     if shape is None:
         shape = (n // 2, 2) if n % 2 == 0 and n > 1 else (n, 1)
     return jax.make_mesh(shape, axes, **auto_axis_kwargs(len(axes)))
+
+
+def make_inference_mesh(num_chains, mesh_shape=None, *, devices=None):
+    """Mesh for the MCMC executor (``chain_method="parallel"``).
+
+    ``mesh_shape=None`` builds the legacy 1-D ``("chains",)`` mesh over the
+    largest device count dividing ``num_chains`` — chains spread, the
+    potential evaluates locally per device.  ``mesh_shape=(Sc, Sd)`` builds
+    the 2-D ``("chains", "data")`` mesh: the chain axis stays GSPMD-sharded
+    (same compiled graph as the 1-D and single-device layouts — the
+    bit-identity invariant), while a data-shard-aware potential evaluates
+    its per-shard partials under ``shard_map`` over the ``data`` axis.
+
+    Raises :class:`~repro.core.errors.ReproValueError` RPL301 when the
+    requested shape does not fit: chain count not divisible by the chain
+    axis (every device must own the same number of whole chains, or the
+    resumed sample streams could not be bit-identical), or more mesh slots
+    than devices.
+    """
+    from repro.core.errors import ReproValueError
+    devices = list(devices) if devices is not None else jax.devices()
+    if mesh_shape is None:
+        use = max(d for d in range(1, len(devices) + 1)
+                  if num_chains % d == 0)
+        return jax.make_mesh((use,), ("chains",), devices=devices[:use],
+                             **auto_axis_kwargs(1))
+    chains_ax, data_ax = (int(v) for v in mesh_shape)
+    if chains_ax < 1 or data_ax < 1:
+        raise ReproValueError(
+            f"mesh_shape={mesh_shape} is not a valid (chains, data) shape",
+            code="RPL301")
+    if num_chains % chains_ax != 0:
+        raise ReproValueError(
+            f"num_chains={num_chains} is not divisible by the mesh chain "
+            f"axis ({chains_ax}): every device must own the same number of "
+            "whole chains for sample streams to stay bit-identical across "
+            "layouts. Pick a chain axis that divides the chain count.",
+            code="RPL301")
+    need = chains_ax * data_ax
+    if need > len(devices):
+        raise ReproValueError(
+            f"mesh_shape={mesh_shape} needs {need} devices but only "
+            f"{len(devices)} are visible.", code="RPL301")
+    return jax.make_mesh((chains_ax, data_ax), ("chains", "data"),
+                         devices=devices[:need], **auto_axis_kwargs(2))

@@ -12,9 +12,13 @@ Two contracts, both declarative:
   hand-enumerated parity lists.
 - The **KernelSetup field contract** (RPL204): hashability (the executor
   jit-caches on setup identity), integer ``num_warmup``, a Stan-style
-  ``adapt_schedule`` of int pairs, callable closures, and — for
+  ``adapt_schedule`` of int pairs, callable closures, — for
   ``cross_chain`` kernels — ensemble state leaves leading with the chain
-  axis.
+  axis, and a coherent ``data_axis`` declaration: a setup that names a mesh
+  data axis must close over a shard-aware potential (one carrying the
+  ``data_shards`` fold marker), and vice versa — either half drifting alone
+  means the executor silently runs monolithic potentials on a sharded mesh
+  (or never activates the mesh at all).
 """
 from __future__ import annotations
 
@@ -271,6 +275,29 @@ def verify_kernel_setup(setup, state=None, num_chains=None):
             f"int pairs, got {sched!r}.")
     if not isinstance(getattr(setup, "cross_chain", None), bool):
         bad("KernelSetup.cross_chain must be a bool.")
+    data_axis = getattr(setup, "data_axis", None)
+    pot = getattr(setup, "potential_fn", None)
+    shards = getattr(pot, "data_shards", None)
+    if data_axis is not None:
+        if not isinstance(data_axis, str):
+            bad(f"KernelSetup.data_axis must be None or a mesh axis name "
+                f"(str), got {type(data_axis).__name__} — the executor "
+                "matches it against Mesh.axis_names.")
+        elif not (isinstance(shards, int) and shards >= 1):
+            bad(f"KernelSetup.data_axis={data_axis!r} declares a data-"
+                "sharded potential, but potential_fn carries no "
+                f"data_shards marker (found {shards!r}) — the executor "
+                "would enter the mesh and evaluate a monolithic potential "
+                "with no shard_map, silently losing data parallelism and "
+                "the resharding bit-identity guarantee. Route the "
+                "potential through maybe_fuse_glm_potential(data_shards=S) "
+                "or drop the axis declaration.")
+    elif isinstance(shards, int) and shards >= 1:
+        bad(f"potential_fn is shard-aware (data_shards={shards}) but "
+            "KernelSetup.data_axis is None — the executor never activates "
+            "the inference mesh, so every shard evaluates locally and the "
+            "declared fold parallelism is dead. Pass the axis through "
+            "resolve_data_axis into the setup.")
     if getattr(setup, "cross_chain", False) and state is not None \
             and num_chains is not None:
         # Shared pooled state (iteration counter, rng key, step size, the

@@ -453,6 +453,34 @@ def test_kernel_setup_contract_catches_violations():
     assert "RPL204" in r.codes() and "chain axis" in str(r)
 
 
+def test_kernel_setup_data_axis_drift_is_caught():
+    """RPL204 fabricated-drift negatives: either half of the data-sharding
+    declaration (setup.data_axis vs the potential's data_shards marker)
+    drifting alone must fail loudly."""
+    setup = _small_nuts_setup()
+    assert setup.data_axis is None and verify_kernel_setup(setup).ok
+
+    # drift 1: axis declared, potential monolithic (no data_shards marker)
+    r = verify_kernel_setup(setup._replace(data_axis="data"))
+    assert "RPL204" in r.codes() and "data_shards" in str(r)
+
+    # drift 2: axis declared but not a mesh axis name
+    r = verify_kernel_setup(setup._replace(data_axis=3))
+    assert "RPL204" in r.codes() and "axis name" in str(r)
+
+    # drift 3: shard-aware potential with no axis declaration
+    def pot(z):
+        return jnp.sum(z * z)
+    pot.data_shards = 4
+    r = verify_kernel_setup(setup._replace(potential_fn=pot))
+    assert "RPL204" in r.codes() and "data_axis is None" in str(r)
+
+    # coherent declaration passes
+    r = verify_kernel_setup(setup._replace(potential_fn=pot,
+                                           data_axis="data"))
+    assert r.ok, f"coherent data_axis declaration flagged:\n{r}"
+
+
 # ---------------------------------------------------------------------------
 # constraint audit: check()/feasible_like() across every distribution
 # ---------------------------------------------------------------------------

@@ -1,5 +1,8 @@
-"""Fault tolerance: SIGTERM mid-training checkpoints and exits cleanly;
-a relaunch resumes from the preemption step."""
+"""Fault tolerance: SIGTERM mid-training checkpoints and exits cleanly; a
+relaunch resumes from the preemption step.  Below that, the MCMC
+preemption sweep: kill the sampler after *every* checkpoint write it
+performs and prove each resumed stream bit-identical to an uninterrupted
+run (docs/distributed.md)."""
 import json
 import os
 import signal
@@ -51,3 +54,142 @@ def test_sigterm_checkpoints_and_resumes(tmp_path):
     out2 = subprocess.run(cmd2, env=env, capture_output=True, text=True,
                           timeout=300)
     assert f"resumed from step {step}" in out2.stdout, out2.stdout[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# MCMC preemption sweep
+#
+# The chunking (num_warmup=24, num_samples=36, checkpoint_every=20) makes a
+# run perform exactly six checkpoint.save calls:
+#
+#     1. state @ 20                (warmup chunk)
+#     2. state @ 24                (warmup remainder)
+#     3. samples_000024_000044     (first sampling chunk, samples write)
+#     4. state @ 44                (first sampling chunk, state write)
+#     5. samples_000044_000060     (second sampling chunk, samples write)
+#     6. state @ 60                (final state write)
+#
+# Killing after call k for every k sweeps every preemption point the
+# protocol has — including k=3 and k=5, which land *between* a chunk's
+# samples write and its state write and leave an orphaned samples dir the
+# resume must deterministically rewrite (same rng path).
+# ---------------------------------------------------------------------------
+
+MCMC_WARMUP, MCMC_SAMPLES, MCMC_EVERY, MCMC_SAVES = 24, 36, 20, 6
+
+
+def _mcmc_kernels():
+    from repro.core.infer import NUTS
+    from repro.core.infer.ensemble import ChEES
+    from repro.core.infer.mala import MALA
+    return {"NUTS": NUTS, "ChEES": ChEES, "MALA": MALA}
+
+
+def _make_mcmc(kernel_cls):
+    import repro.core as pc
+    from repro.core import dist
+    from repro.core.infer import MCMC
+
+    def model():
+        pc.sample("x", dist.Normal(1.0, 2.0))
+
+    return MCMC(kernel_cls(model), num_warmup=MCMC_WARMUP,
+                num_samples=MCMC_SAMPLES, num_chains=4,
+                chain_method="vectorized")
+
+
+def _run_counting(kernel_cls, ckdir, kill_at=None):
+    """Run with checkpointing; with ``kill_at``, raise KeyboardInterrupt
+    right after that save call (a preemption landing at that write).
+    Returns the number of save calls made."""
+    from jax import random
+
+    from repro.distributed import checkpoint as ckpt
+    real_save, calls = ckpt.save, {"n": 0}
+
+    def wrapped_save(tree, directory, **kw):
+        real_save(tree, directory, **kw)
+        calls["n"] += 1
+        if calls["n"] == kill_at:
+            raise KeyboardInterrupt(f"preempted after save #{kill_at}")
+
+    ckpt.save = wrapped_save
+    try:
+        run = lambda: _make_mcmc(kernel_cls).run(  # noqa: E731
+            random.PRNGKey(11), checkpoint_every=MCMC_EVERY,
+            checkpoint_dir=ckdir)
+        if kill_at is None:
+            run()
+        else:
+            with pytest.raises(KeyboardInterrupt):
+                run()
+    finally:
+        ckpt.save = real_save
+    return calls["n"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(_mcmc_kernels()))
+def test_mcmc_preemption_sweep_resumes_bit_identical(name, tmp_path):
+    import numpy as np
+    from jax import random
+
+    from repro.distributed import checkpoint as ckpt
+
+    kernel_cls = _mcmc_kernels()[name]
+    ref = _make_mcmc(kernel_cls)
+    ref.run(random.PRNGKey(11))
+    expected = np.asarray(ref.get_samples(group_by_chain=True)["x"])
+    assert expected.shape == (4, MCMC_SAMPLES)
+
+    # the sweep must cover every save call the run performs — if the count
+    # drifts (chunking change), fail loudly instead of silently skipping
+    # preemption points
+    total = _run_counting(kernel_cls, str(tmp_path / "count"))
+    assert total == MCMC_SAVES, (
+        f"checkpoint chunking changed: expected {MCMC_SAVES} save calls, "
+        f"got {total}; update the sweep in this test")
+
+    for kill_at in range(1, MCMC_SAVES + 1):
+        ckdir = str(tmp_path / f"kill{kill_at}")
+        made = _run_counting(kernel_cls, ckdir, kill_at=kill_at)
+        assert made == kill_at
+        resumed = _make_mcmc(kernel_cls)
+        resumed.run(random.PRNGKey(11), checkpoint_every=MCMC_EVERY,
+                    checkpoint_dir=ckdir, resume=True)
+        got = np.asarray(resumed.get_samples(group_by_chain=True)["x"])
+        np.testing.assert_array_equal(
+            got, expected,
+            err_msg=f"{name}: resume after kill at save #{kill_at} diverged "
+            "from the uninterrupted run")
+        assert ckpt.latest_step(os.path.join(ckdir, "state")) \
+            == MCMC_WARMUP + MCMC_SAMPLES
+
+
+def test_mcmc_kill_between_samples_and_state_write_rewrites_orphan(tmp_path):
+    """The nastiest preemption point, isolated (and cheap enough to run
+    unmarked in tier-1): the crash lands after ``samples_000024_000044`` is
+    on disk but before the state manifest advances past 24.  The resume
+    must treat the chunk as an abandoned future, rewrite it on the same
+    rng path, and still finish bit-identically."""
+    import numpy as np
+    from jax import random
+
+    from repro.core.infer import NUTS
+    from repro.distributed import checkpoint as ckpt
+
+    ref = _make_mcmc(NUTS)
+    ref.run(random.PRNGKey(11))
+    expected = np.asarray(ref.get_samples(group_by_chain=True)["x"])
+
+    ckdir = str(tmp_path / "orphan")
+    _run_counting(NUTS, ckdir, kill_at=3)
+    # orphaned chunk on disk, state manifest still at warmup end
+    assert ckpt.latest_step(os.path.join(ckdir, "state")) == MCMC_WARMUP
+    assert os.path.isdir(os.path.join(ckdir, "samples_000024_000044"))
+
+    resumed = _make_mcmc(NUTS)
+    resumed.run(random.PRNGKey(11), checkpoint_every=MCMC_EVERY,
+                checkpoint_dir=ckdir, resume=True)
+    np.testing.assert_array_equal(
+        np.asarray(resumed.get_samples(group_by_chain=True)["x"]), expected)

@@ -1,0 +1,179 @@
+"""Property-based resharding invariants for the bit-identity layer.
+
+Two function families carry the "same bits under every layout" guarantee
+(docs/distributed.md): the :func:`~repro.core.infer.hmc_util.chain_sum`
+pairwise-tree fold, and the data-sharded GLM potential built by
+:func:`~repro.core.infer.glm._make_sharded_nll`.  These tests drive both
+with hypothesis-drawn shapes/values (the deterministic stub in hermetic
+images, real hypothesis when installed) and assert ``array_equal`` —
+never ``allclose``: a single ULP of drift breaks resumed-run equality.
+
+The mesh axis sizes adapt to ``jax.device_count()``: under plain tier-1
+(1 CPU device) the meshes are degenerate but still exercise the
+``shard_map``/``all_gather`` graph path; the CI ``multidevice-smoke`` job
+re-runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+where the layouts genuinely differ.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.infer.glm import _make_sharded_nll
+from repro.core.infer.hmc_util import chain_sum, chain_vmap
+from repro.distributed.sharding import use_inference_mesh
+from repro.launch.mesh import make_inference_mesh
+
+
+def _divisors(n):
+    return [k for k in range(1, n + 1) if n % k == 0]
+
+
+def _mesh_shapes(num_chains):
+    """Every (chains, data) mesh constructible from the available devices
+    with the chain count divisible by the chain axis."""
+    ndev = jax.device_count()
+    shapes = []
+    for sc in _divisors(num_chains):
+        for sd in (1, 2, 4, 8):
+            if sc * sd <= ndev:
+                shapes.append((sc, sd))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# chain_sum: the fold result is a pure function of the values — placement
+# of the leading axis over any constructible mesh must not move one bit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(log2c=st.integers(0, 5), dim=st.integers(1, 7),
+       scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**16))
+def test_chain_sum_bit_identical_under_resharding(log2c, dim, scale, seed):
+    c = 2 ** log2c
+    x = jax.random.normal(jax.random.PRNGKey(seed), (c, dim)) * scale
+    ref = np.asarray(jax.jit(chain_sum)(x))
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    for shape in _mesh_shapes(c):
+        mesh = make_inference_mesh(c, shape)
+        xs = jax.device_put(x, NamedSharding(mesh, P("chains")))
+        got = np.asarray(jax.jit(chain_sum)(xs))
+        np.testing.assert_array_equal(
+            got, ref, err_msg=f"chain_sum drifted on mesh {shape}")
+
+
+@settings(max_examples=5, deadline=None)
+@given(c=st.integers(1, 33), dim=st.integers(1, 5),
+       seed=st.integers(0, 2**16))
+def test_chain_sum_matches_documented_fold(c, dim, seed):
+    """The fold's *structure* is the contract (docs/distributed.md):
+    iteratively add the top half onto the bottom half, carrying any odd
+    remainder.  A numpy float32 re-implementation must match bitwise — if
+    someone 'simplifies' chain_sum to jnp.sum, this catches it on one
+    device."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (c, dim)),
+                   np.float32)
+    ref = x.copy()
+    while ref.shape[0] > 1:
+        half = ref.shape[0] // 2
+        folded = ref[:half] + ref[half:2 * half]
+        if ref.shape[0] % 2:
+            folded = np.concatenate([folded, ref[2 * half:]], axis=0)
+        ref = folded
+    got = np.asarray(jax.jit(chain_sum)(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, ref[0])
+
+
+# ---------------------------------------------------------------------------
+# the sharded GLM potential: local S-shard fold vs the shard_map path on
+# every constructible mesh, value and gradient, array_equal
+# ---------------------------------------------------------------------------
+
+def _glm_problem(n, d, seed, family):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    offset = jax.random.normal(ks[1], (n,)) * 0.1
+    if family == "bernoulli_logit":
+        y = (jax.random.uniform(ks[2], (n,)) < 0.5).astype(jnp.float32)
+        scale = None
+    else:
+        y = jax.random.normal(ks[2], (n,))
+        scale = jnp.asarray(1.3)
+    z = jax.random.normal(ks[3], (d,)) * 0.5
+    return x, y, offset, scale, z
+
+
+@settings(max_examples=4, deadline=None)
+@given(blocks=st.integers(1, 4), d=st.integers(1, 6),
+       log2s=st.integers(0, 3), seed=st.integers(0, 2**16))
+@pytest.mark.parametrize("family", ["bernoulli_logit", "normal"])
+def test_sharded_potential_bit_identical_under_resharding(
+        family, blocks, d, log2s, seed):
+    S = 2 ** log2s
+    n = S * blocks * 8                       # always divisible by S
+    x, y, offset, scale, z = _glm_problem(n, d, seed, family)
+    nll = _make_sharded_nll(x, y, offset, scale, family, S)
+
+    def value_and_grad(zz):
+        return jax.value_and_grad(nll)(zz)
+
+    ref_v, ref_g = jax.jit(value_and_grad)(z)
+    ref_v, ref_g = np.asarray(ref_v), np.asarray(ref_g)
+    assert np.isfinite(ref_v) and np.all(np.isfinite(ref_g))
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    for shape in _mesh_shapes(num_chains=8):
+        sc, sd = shape
+        if S % sd != 0:
+            continue                          # RPL303 territory, not parity
+        mesh = make_inference_mesh(8, shape)
+        zr = jax.device_put(z, NamedSharding(mesh, P()))
+
+        def sharded(zz):
+            with use_inference_mesh(mesh, "data"):
+                return value_and_grad(zz)
+
+        got_v, got_g = jax.jit(sharded)(zr)
+        np.testing.assert_array_equal(
+            np.asarray(got_v), ref_v,
+            err_msg=f"potential value drifted on mesh {shape} (S={S})")
+        np.testing.assert_array_equal(
+            np.asarray(got_g), ref_g,
+            err_msg=f"potential gradient drifted on mesh {shape} (S={S})")
+
+
+@settings(max_examples=3, deadline=None)
+@given(d=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_sharded_potential_chain_batched_under_resharding(d, seed):
+    """The executor's actual shape: the potential under a chain-batching
+    ``chain_vmap`` with the chain axis sharded (spmd_axis_name) and the
+    data axis driving the shard_map — the full 2-D layout."""
+    S, n, c = 4, 64, 8
+    x, y, offset, scale, _ = _glm_problem(n, d, seed, "bernoulli_logit")
+    z = jax.random.normal(jax.random.PRNGKey(seed + 1), (c, d)) * 0.5
+    nll = _make_sharded_nll(x, y, offset, scale, "bernoulli_logit", S)
+
+    ref_v, ref_g = jax.jit(
+        lambda zz: jax.vmap(jax.value_and_grad(nll))(zz))(z)
+    ref_v, ref_g = np.asarray(ref_v), np.asarray(ref_g)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    for shape in _mesh_shapes(c):
+        sc, sd = shape
+        if S % sd != 0:
+            continue
+        mesh = make_inference_mesh(c, shape)
+        zs = jax.device_put(z, NamedSharding(mesh, P("chains")))
+
+        def batched(zz):
+            with use_inference_mesh(mesh, "data"):
+                return chain_vmap(jax.value_and_grad(nll))(zz)
+
+        got_v, got_g = jax.jit(batched)(zs)
+        np.testing.assert_array_equal(np.asarray(got_v), ref_v,
+                                      err_msg=f"mesh {shape}")
+        np.testing.assert_array_equal(np.asarray(got_g), ref_g,
+                                      err_msg=f"mesh {shape}")

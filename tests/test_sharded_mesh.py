@@ -1,0 +1,246 @@
+"""Acceptance: many-device sharded inference on the 2-D (chains x data)
+mesh (docs/distributed.md).
+
+The headline matrix runs in a subprocess with 8 virtual CPU devices: a
+logistic-regression posterior with the fused, data-sharded GLM potential,
+16 chains, sampled under ``chain_method="vectorized"``, the legacy 1-D
+``("chains",)`` mesh, and the 2-D ``(4, 2)`` chains-x-data mesh — the
+three sample streams must be byte-identical for NUTS, ChEES, and MALA.
+
+Below that, the in-process contract tests: RPL301 (mesh construction),
+RPL302 (data_shards without a shard-aware potential), RPL303 (shard count
+not divisible by the mesh data axis), and the ``KernelSetup.data_axis``
+plumbing the RPL204 lint rule keys on.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+MATRIX_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax import random
+import repro.core as pc
+from repro.core import dist
+from repro.core.infer import MCMC, NUTS
+from repro.core.infer.ensemble import ChEES
+from repro.core.infer.mala import MALA
+
+kern = {"nuts": NUTS, "chees": ChEES, "mala": MALA}[os.environ["SMESH_KERNEL"]]
+
+n, d = 512, 8
+x = random.normal(random.PRNGKey(0), (n, d))
+w_true = jnp.linspace(-1.0, 1.0, d)
+y = (random.uniform(random.PRNGKey(1), (n,))
+     < jax.nn.sigmoid(x @ w_true)).astype(jnp.float32)
+
+def model(x, y):
+    w = pc.sample("w", dist.Normal(jnp.zeros(d), 1.0).to_event(1))
+    pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+              infer={"potential": "glm"})
+
+def run(chain_method, mesh_shape=None):
+    kw = {"chain_method": chain_method}
+    if chain_method == "parallel":
+        kw["mesh_shape"] = mesh_shape
+    m = MCMC(kern(model, data_shards=4), num_warmup=24, num_samples=24,
+             num_chains=16, **kw)
+    m.run(random.PRNGKey(7), x, y)
+    return np.asarray(m.get_samples()["w"], np.float32).tobytes().hex()
+
+out = {"n_devices": len(jax.devices()),
+       "vectorized": run("vectorized"),
+       "mesh_1d": run("parallel", None),
+       "mesh_4x2": run("parallel", (4, 2))}
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kernel", ["nuts", "chees", "mala"])
+def test_sample_streams_identical_across_layouts(kernel):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"),
+               SMESH_KERNEL=kernel)
+    out = subprocess.run([sys.executable, "-c", MATRIX_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["n_devices"] == 8
+    assert got["mesh_1d"] == got["vectorized"], (
+        f"{kernel}: 1-D chains mesh diverged from vectorized")
+    assert got["mesh_4x2"] == got["vectorized"], (
+        f"{kernel}: 2-D (4,2) chains-x-data mesh diverged from vectorized")
+
+
+# ---------------------------------------------------------------------------
+# RPL301: mesh construction contract (in-process, any device count)
+# ---------------------------------------------------------------------------
+
+def test_make_inference_mesh_default_is_1d_chains():
+    import jax
+
+    from repro.launch.mesh import make_inference_mesh
+    mesh = make_inference_mesh(8)
+    assert mesh.axis_names == ("chains",)
+    # largest divisor of the chain count that fits the device pool
+    assert 8 % mesh.shape["chains"] == 0
+    assert mesh.shape["chains"] <= len(jax.devices())
+
+
+def test_make_inference_mesh_2d_axis_names():
+    from repro.launch.mesh import make_inference_mesh
+    mesh = make_inference_mesh(8, (1, 1))
+    assert mesh.axis_names == ("chains", "data")
+
+
+@pytest.mark.parametrize("num_chains,shape", [
+    (8, (0, 1)),     # degenerate axis
+    (8, (-1, 2)),    # negative axis
+    (5, (2, 1)),     # chains not divisible by the chain axis
+    (8, (64, 64)),   # more slots than any real device pool
+])
+def test_make_inference_mesh_rejects_bad_shapes(num_chains, shape):
+    from repro.core.errors import ReproValueError
+    from repro.launch.mesh import make_inference_mesh
+    with pytest.raises(ReproValueError) as e:
+        make_inference_mesh(num_chains, shape)
+    assert e.value.code == "RPL301"
+
+
+# ---------------------------------------------------------------------------
+# RPL302: data_shards without a shard-aware potential must fail at setup,
+# not silently run a monolithic potential under a data mesh
+# ---------------------------------------------------------------------------
+
+def _plain_model():
+    import jax.numpy as jnp
+
+    import repro.core as pc
+    from repro.core import dist
+
+    def model():
+        pc.sample("x", dist.Normal(jnp.zeros(2), 1.0).to_event(1))
+
+    return model
+
+
+def test_data_shards_without_glm_marker_raises_rpl302():
+    from jax import random
+
+    from repro.core.errors import ReproValueError
+    from repro.core.infer import MCMC, NUTS
+    m = MCMC(NUTS(_plain_model(), data_shards=4), num_warmup=2,
+             num_samples=2, num_chains=2, chain_method="vectorized")
+    with pytest.raises(ReproValueError) as e:
+        m.run(random.PRNGKey(0))
+    assert e.value.code == "RPL302"
+
+
+def test_data_shards_mismatched_marker_raises_rpl302():
+    from repro.core.errors import ReproValueError
+    from repro.core.infer.hmc import resolve_data_axis
+
+    def pot(z):
+        return 0.0
+
+    pot.data_shards = 8
+    with pytest.raises(ReproValueError) as e:
+        resolve_data_axis(pot, 4)
+    assert e.value.code == "RPL302"
+    assert resolve_data_axis(pot, 8) == "data"
+    assert resolve_data_axis(pot, None) is None
+
+
+# ---------------------------------------------------------------------------
+# RPL303: shard fold not divisible by the mesh data axis — raised eagerly
+# by MCMC.run before compilation (subprocess: needs a multi-device mesh)
+# ---------------------------------------------------------------------------
+
+RPL303_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax import random
+import repro.core as pc
+from repro.core import dist
+from repro.core.infer import MCMC, NUTS
+
+n, d = 64, 2
+x = random.normal(random.PRNGKey(0), (n, d))
+y = (random.uniform(random.PRNGKey(1), (n,)) < 0.5).astype(jnp.float32)
+
+def model(x, y):
+    w = pc.sample("w", dist.Normal(jnp.zeros(d), 1.0).to_event(1))
+    pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+              infer={"potential": "glm"})
+
+# data axis of 8 does not divide data_shards=4
+m = MCMC(NUTS(model, data_shards=4), num_warmup=2, num_samples=2,
+         num_chains=8, chain_method="parallel", mesh_shape=(1, 8))
+try:
+    m.run(random.PRNGKey(7), x, y)
+    print(json.dumps({"error": None}))
+except Exception as e:
+    print(json.dumps({"error": f"{type(e).__name__}: {e}"[:400]}))
+"""
+
+
+def test_indivisible_data_shards_raise_rpl303_eagerly():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", RPL303_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["error"] is not None and "RPL303" in got["error"], got
+
+
+# ---------------------------------------------------------------------------
+# KernelSetup.data_axis plumbing: the coherent declaration RPL204 keys on
+# ---------------------------------------------------------------------------
+
+def _glm_setup(data_shards):
+    import jax.numpy as jnp
+    from jax import random
+
+    import repro.core as pc
+    from repro.core import dist
+    from repro.core.infer.hmc import hmc_setup
+
+    n, d = 32, 2
+    x = random.normal(random.PRNGKey(0), (n, d))
+    y = (random.uniform(random.PRNGKey(1), (n,)) < 0.5).astype(jnp.float32)
+
+    def model(x, y):
+        w = pc.sample("w", dist.Normal(jnp.zeros(d), 1.0).to_event(1))
+        pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+                  infer={"potential": "glm"})
+
+    return hmc_setup(random.PRNGKey(2), 4, model=model, model_args=(x, y),
+                     data_shards=data_shards)
+
+
+def test_sharded_setup_declares_data_axis_coherently():
+    from repro.lint_rules.invariants import verify_kernel_setup
+    setup = _glm_setup(4)
+    assert setup.data_axis == "data"
+    assert getattr(setup.potential_fn, "data_shards", None) == 4
+    verify_kernel_setup(setup)   # RPL204-clean
+
+
+def test_unsharded_setup_has_no_data_axis():
+    from repro.lint_rules.invariants import verify_kernel_setup
+    setup = _glm_setup(None)
+    assert setup.data_axis is None
+    assert getattr(setup.potential_fn, "data_shards", None) is None
+    verify_kernel_setup(setup)
