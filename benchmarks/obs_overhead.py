@@ -1,0 +1,78 @@
+"""Telemetry overhead on the logreg quick headline (docs/observability.md).
+
+Warm-path walls over the same compiled-program shapes — telemetry detached
+vs. a full :class:`repro.obs.Telemetry` (metrics stream, spans, JSONL
+events, manifest) — on the quick Table-2a settings (CoverType-shaped
+n=20k, 150 warmup + 150 samples, 4 chains).  The acceptance bar is
+``overhead_pct < 3``: metrics ride the chunk scan's collect outputs and
+drain once per compiled chunk, so the only added work is one device→host
+transfer per chunk plus host-side JSON appends.
+
+Measurement protocol: both arms run the *same* rng key (bit-identity makes
+the device work identical draw for draw), reps are interleaved off/on to
+decorrelate machine noise, and the headline compares min-walls — on a
+shared CPU the per-rep spread (~±5%) is larger than the effect being
+measured, so means would report noise.  Every timed run blocks on the
+collected samples: without telemetry the executor dispatches
+asynchronously, and an unblocked wall measures dispatch, not work.
+"""
+import json
+import shutil
+import sys
+import tempfile
+import time
+
+from jax import random
+
+from benchmarks.models import covtype_data, logreg_model
+
+
+def _make(telemetry, data, num_chains=4):
+    """Build + compile (one throwaway run) an MCMC for one arm."""
+    import jax
+
+    from repro.core.infer import MCMC, NUTS
+
+    mcmc = MCMC(NUTS(logreg_model), num_warmup=150, num_samples=150,
+                num_chains=num_chains, progress=False, telemetry=telemetry)
+    mcmc.run(random.PRNGKey(0), data["x"], y=data["y"])
+    jax.block_until_ready(mcmc.get_samples())
+    return mcmc
+
+
+def main(quick=False):
+    import jax
+
+    from repro import obs
+
+    data = covtype_data(n=20_000)
+    out_dir = tempfile.mkdtemp(prefix="obs_overhead_")
+    # ~±5% per-rep machine noise vs a <3% budget: even quick mode needs
+    # enough reps for the min-wall to converge
+    reps = 6
+    try:
+        arms = [("off", _make(None, data)),
+                ("on", _make(obs.Telemetry(dir=out_dir), data))]
+        walls = {"off": [], "on": []}
+        for _ in range(reps):
+            for name, mcmc in arms:
+                t0 = time.time()
+                mcmc.run(random.PRNGKey(1), data["x"], y=data["y"])
+                jax.block_until_ready(mcmc.get_samples())
+                walls[name].append(time.time() - t0)
+    finally:
+        shutil.rmtree(out_dir, ignore_errors=True)
+    off_s, on_s = min(walls["off"]), min(walls["on"])
+    overhead_pct = 100.0 * (on_s - off_s) / off_s
+    rec = {"benchmark": "obs_overhead_logreg_quick", "n": 20_000,
+           "num_warmup": 150, "num_samples": 150, "num_chains": 4,
+           "reps": reps, "warm_wall_off_s": off_s, "warm_wall_on_s": on_s,
+           "walls_off_s": walls["off"], "walls_on_s": walls["on"],
+           "overhead_pct": overhead_pct, "budget_pct": 3.0,
+           "within_budget": bool(overhead_pct < 3.0)}
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -2,13 +2,33 @@
 
 ``python -m benchmarks.run``          — full paper-spec settings
 ``python -m benchmarks.run --quick``  — reduced step counts (CI / smoke)
+``--profile``                         — wrap each section in a
+                                        ``jax.profiler.trace`` (perfetto
+                                        dirs under results/profile/)
 """
+import contextlib
 import json
 import os
 import sys
 import time
 
 RESULTS = "benchmarks/results"
+
+
+def _profiler(enabled):
+    """Per-section ``jax.profiler.trace`` wrapper (inert when disabled)."""
+    if not enabled:
+        return lambda name: contextlib.nullcontext()
+    import jax
+
+    base = os.path.join(RESULTS, "profile")
+
+    def section(name):
+        trace_dir = os.path.join(base, name)
+        print(f"[profiling -> {trace_dir}]", flush=True)
+        return jax.profiler.trace(trace_dir)
+
+    return section
 
 
 def _previous_headlines():
@@ -69,67 +89,50 @@ def _lint_bench():
 
 def main():
     quick = "--quick" in sys.argv or os.environ.get("BENCH_QUICK") == "1"
+    profile = _profiler("--profile" in sys.argv)
     os.makedirs(RESULTS, exist_ok=True)
     t0 = time.time()
     out = {}
     previous = _previous_headlines()
 
-    from benchmarks import (chees, enum_hmm, hmm, logreg, multichain, skim,
-                            svi_minibatch)
-    print("=" * 70)
-    print("Table 2a — HMM (time per leapfrog step)")
-    print("=" * 70, flush=True)
-    out["hmm"] = hmm.main(quick=quick)
+    # every summary records where it was measured (the trajectory in
+    # BENCH_<n>.json is only comparable within one environment)
+    from repro.obs import collect_environment
+    out["environment"] = collect_environment()
 
-    print("=" * 70)
-    print("Enum HMM — fully latent states, ms/leapfrog vs K (markov + "
-          "enum_contract)")
-    print("=" * 70, flush=True)
-    out["enum_hmm"] = enum_hmm.main(quick=quick)
+    from benchmarks import (chees, enum_hmm, hmm, logreg, multichain,
+                            obs_overhead, skim, svi_minibatch)
+    from benchmarks import kernels_bench, sharded_potential
 
-    print("=" * 70)
-    print("Table 2a — logistic regression / CoverType-shaped")
-    print("=" * 70, flush=True)
-    out["logreg"] = logreg.main(quick=quick)
-
-    print("=" * 70)
-    print("Multi-chain throughput (chains × samples/sec, vmap executor)")
-    print("=" * 70, flush=True)
-    out["multichain"] = multichain.main(quick=quick)
-
-    print("=" * 70)
-    print("ChEES-HMC vs NUTS (samples/sec + ESS/sec vs chain count)")
-    print("=" * 70, flush=True)
-    out["chees"] = chees.main(quick=quick)
-
-    print("=" * 70)
-    print("Minibatch SVI (steps/sec vs subsample size, one compiled step)")
-    print("=" * 70, flush=True)
-    out["svi_minibatch"] = svi_minibatch.main(quick=quick)
-
-    print("=" * 70)
-    print("Fig 2b — SKIM time per effective sample vs p")
-    print("=" * 70, flush=True)
-    out["skim"] = skim.main(quick=quick)
-
-    print("=" * 70)
-    print("Hot-path kernels — per-op ms + roofline fraction, GLM fused vs "
-          "plain, ChEES 64-chain warm wall")
-    print("=" * 70, flush=True)
-    from benchmarks import kernels_bench
-    out["kernels"] = kernels_bench.main(quick=quick)
-
-    print("=" * 70)
-    print("Data-sharded GLM potential — ms/eval vs mesh data-axis size "
-          "(8 virtual devices, chains x data mesh)")
-    print("=" * 70, flush=True)
-    from benchmarks import sharded_potential
-    out["sharded_potential"] = sharded_potential.main(quick=quick)
-
-    print("=" * 70)
-    print("Static analyzer — lint_ms on logreg (cost of validate=True)")
-    print("=" * 70, flush=True)
-    out["lint"] = _lint_bench()
+    sections = [
+        ("hmm", "Table 2a — HMM (time per leapfrog step)", hmm.main),
+        ("enum_hmm", "Enum HMM — fully latent states, ms/leapfrog vs K "
+         "(markov + enum_contract)", enum_hmm.main),
+        ("logreg", "Table 2a — logistic regression / CoverType-shaped",
+         logreg.main),
+        ("multichain", "Multi-chain throughput (chains × samples/sec, vmap "
+         "executor)", multichain.main),
+        ("chees", "ChEES-HMC vs NUTS (samples/sec + ESS/sec vs chain "
+         "count)", chees.main),
+        ("svi_minibatch", "Minibatch SVI (steps/sec vs subsample size, one "
+         "compiled step)", svi_minibatch.main),
+        ("skim", "Fig 2b — SKIM time per effective sample vs p", skim.main),
+        ("kernels", "Hot-path kernels — per-op ms + roofline fraction, GLM "
+         "fused vs plain, ChEES 64-chain warm wall", kernels_bench.main),
+        ("sharded_potential", "Data-sharded GLM potential — ms/eval vs mesh "
+         "data-axis size (8 virtual devices, chains x data mesh)",
+         sharded_potential.main),
+        ("obs_overhead", "Telemetry overhead — logreg quick warm wall, "
+         "metrics on vs off (budget < 3%)", obs_overhead.main),
+        ("lint", "Static analyzer — lint_ms on logreg (cost of "
+         "validate=True)", lambda quick: _lint_bench()),
+    ]
+    for key, title, fn in sections:
+        print("=" * 70)
+        print(title)
+        print("=" * 70, flush=True)
+        with profile(key):
+            out[key] = fn(quick=quick)
 
     print("=" * 70)
     print("Roofline (from dry-run artifacts; see EXPERIMENTS.md)")
@@ -148,10 +151,10 @@ def main():
         json.dump(out, f, indent=1)
     # per-PR snapshot: bench_summary.json is overwritten every run, the
     # BENCH_<n>.json files accumulate the trajectory
-    with open(os.path.join(RESULTS, "BENCH_8.json"), "w") as f:
+    with open(os.path.join(RESULTS, "BENCH_9.json"), "w") as f:
         json.dump(out, f, indent=1)
     print(f"\nall benchmarks done in {out['total_wall_s']:.0f}s; summary in "
-          f"{RESULTS}/bench_summary.json (snapshot: BENCH_8.json)")
+          f"{RESULTS}/bench_summary.json (snapshot: BENCH_9.json)")
 
 
 if __name__ == "__main__":

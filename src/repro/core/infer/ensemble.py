@@ -387,6 +387,25 @@ def _collect_fn(state: ChEESState):
     }
 
 
+def _metrics_fn(state: ChEESState):
+    """Metrics stream under the cross-chain contract: pooled ensemble
+    quantities stay scalars (the executor records them once per draw, not
+    per chain), per-chain quantities are ``(C,)``.  Unlike ``_collect_fn``
+    there is no broadcasting — the stream records what the ensemble
+    actually adapts: one shared step size, one trajectory length, one
+    pooled mass-matrix trace."""
+    adapt = state.adapt_state
+    return {
+        "step_size": adapt.step_size,                        # scalar, pooled
+        "trajectory_length": jnp.exp(adapt.log_traj),        # scalar, pooled
+        "num_steps": state.num_steps,                        # scalar, shared
+        "mass_trace": jnp.sum(adapt.inverse_mass_matrix),    # scalar, pooled
+        "accept_prob": state.accept_prob,                    # (C,)
+        "diverging": state.diverging,                        # (C,)
+        "energy": state.energy,                              # (C,)
+    }
+
+
 def chees_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
                 init_params=None, model_args=(), model_kwargs=None,
                 step_size=1.0, adapt_step_size=True, adapt_mass_matrix=True,
@@ -428,7 +447,7 @@ def chees_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo="ChEES",
         adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
-        cross_chain=True, data_axis=data_axis)
+        cross_chain=True, data_axis=data_axis, metrics_fn=_metrics_fn)
 
 
 def chees_init(rng_key, num_warmup, num_chains, **kwargs):

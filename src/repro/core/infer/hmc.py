@@ -263,6 +263,26 @@ def _collect_fn(state: HMCState):
     }
 
 
+def _metrics_fn(state: HMCState):
+    """Metrics stream (``KernelSetup.metrics_fn``): all scalars, per the
+    per-chain contract — the executor's vmap adds the chain axis and the
+    chunk scan the draw axis.  Reads state only (never the rng key), so it
+    can ride the collect path without perturbing the sample stream.
+    ``num_steps`` is the trajectory's leapfrog count (2^depth-ish for NUTS —
+    the tree-depth signal); ``mass_trace`` tracks the adapted (inverse)
+    mass matrix through warmup windows."""
+    imm = state.adapt_state.inverse_mass_matrix
+    mass_trace = jnp.trace(imm) if imm.ndim == 2 else jnp.sum(imm)
+    return {
+        "step_size": state.adapt_state.step_size,
+        "accept_prob": state.accept_prob,
+        "diverging": state.diverging,
+        "num_steps": state.num_steps,
+        "energy": state.energy,
+        "mass_trace": mass_trace,
+    }
+
+
 def flat_model_ingredients(rng_key, *, model=None, potential_fn=None,
                            init_params=None, model_args=(),
                            model_kwargs=None, data_shards=None):
@@ -382,12 +402,18 @@ def hmc_setup(rng_key, num_warmup, *, model=None, potential_fn=None,
         init_fn, sample_fn = _cross_chain_wrap(
             init_fn, sample_fn, schedule, num_warmup,
             pool_mass=adapt_mass_matrix)
+    # cross-chain-adapted HMC drives the *batched* state, so the metrics fn
+    # is vmapped the same way the transition is: every leaf comes out (C,),
+    # which is the valid per-chain shape under the cross_chain contract
+    metrics_fn = (chain_vmap(_metrics_fn) if cross_chain_adapt
+                  else _metrics_fn)
     return KernelSetup(
         init_fn=init_fn, sample_fn=sample_fn, collect_fn=_collect_fn,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo=algo,
         adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
-        cross_chain=cross_chain_adapt, data_axis=data_axis)
+        cross_chain=cross_chain_adapt, data_axis=data_axis,
+        metrics_fn=metrics_fn)
 
 
 def _cross_chain_wrap(chain_init_fn, chain_sample_fn, schedule, num_warmup,

@@ -86,6 +86,19 @@ class KernelSetup(NamedTuple):
     # repro.distributed.sharding.use_inference_mesh).  RPL204 verifies that
     # a setup declaring data_axis has a shard-aware potential.
     data_axis: Optional[str] = None
+    # metrics stream contract (see repro.obs and docs/observability.md): a
+    # pure ``state -> dict[str, scalar]`` the executor folds into the
+    # chunked scan's *collect* outputs (never the carry), so per-iteration
+    # sampler internals (step size, accept prob, divergence, tree depth /
+    # trajectory length, mass-matrix trace) stream off-device once per
+    # compiled chunk with zero extra host syncs and a bit-identical sample
+    # stream.  Per-chain kernels return scalars (the executor's vmap adds
+    # the chain axis); cross_chain kernels return scalars (pooled) or
+    # (num_chains,) vectors.  RPL401 rejects other shapes; RPL402 rejects a
+    # metrics_fn that reads the state's rng key (randomness would have to
+    # perturb the stream to be visible — by contract it must not).
+    # None (the default) opts out: nothing about the executor changes.
+    metrics_fn: Optional[Callable] = None
 
 
 def init_state(setup: KernelSetup, rng_key):
@@ -101,6 +114,15 @@ def sample(setup: KernelSetup, state):
 def collect(setup: KernelSetup, state):
     """Per-draw outputs (position + diagnostics) recorded by the executor."""
     return setup.collect_fn(state)
+
+
+def metrics(setup: KernelSetup, state):
+    """One metrics-stream sample (``None`` when the kernel declares no
+    ``metrics_fn``) — what the executor appends to the collect path per
+    draw when telemetry requests metrics."""
+    if setup.metrics_fn is None:
+        return None
+    return setup.metrics_fn(state)
 
 
 @runtime_checkable

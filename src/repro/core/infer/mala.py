@@ -234,6 +234,20 @@ def _collect_fn(state: MRWState):
     }
 
 
+def _metrics_fn(state: MRWState):
+    """Metrics stream under the cross-chain contract: the pooled step size
+    and preconditioner trace stay scalars (one value per draw — that is
+    what the ensemble actually adapts), per-chain diagnostics are (C,)."""
+    adapt = state.adapt_state
+    return {
+        "step_size": adapt.step_size,                       # scalar, pooled
+        "mass_trace": jnp.sum(adapt.inverse_mass_matrix),   # scalar, pooled
+        "accept_prob": state.accept_prob,                   # (C,)
+        "diverging": state.diverging,                       # (C,)
+        "potential_energy": state.potential_energy,         # (C,)
+    }
+
+
 def mrw_setup(rng_key, num_warmup, algo, *, model=None, potential_fn=None,
               init_params=None, model_args=(), model_kwargs=None,
               step_size=0.1, adapt_step_size=True, adapt_mass_matrix=True,
@@ -273,7 +287,7 @@ def mrw_setup(rng_key, num_warmup, algo, *, model=None, potential_fn=None,
         potential_fn=potential_flat, unravel_fn=unravel,
         constrain_fn=constrain, num_warmup=int(num_warmup), algo=algo,
         adapt_schedule=tuple((int(s), int(e)) for (s, e) in schedule),
-        cross_chain=True, data_axis=data_axis)
+        cross_chain=True, data_axis=data_axis, metrics_fn=_metrics_fn)
 
 
 class _MRWKernel:

@@ -62,6 +62,15 @@ def _tree_concat(parts, axis=1):
         lambda *xs: jnp.concatenate(xs, axis=axis), *parts)
 
 
+def _metrics_chain_first(met):
+    """Cross-chain metrics leave the scan as ``(draws,)`` pooled scalars or
+    ``(draws, C)`` per-chain vectors; put the chain axis first on the
+    latter so buffered per-chain series are ``(C, draws)`` like the collect
+    path, while pooled series stay ``(draws,)``."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.swapaxes(x, 0, 1) if x.ndim >= 2 else x, met)
+
+
 def _same_args(old, new):
     """True iff two (args, kwargs, init_params) bundles are structurally
     identical with every array leaf being the *same object* — the executor's
@@ -85,8 +94,15 @@ class MCMC:
                  num_chains: int = 1, thinning: int = 1,
                  chain_method: str = "vectorized", progress: bool = False,
                  collect_fields=("z",), jit_model_args: bool = False,
-                 validate: bool = False, mesh_shape=None):
+                 validate: bool = False, mesh_shape=None, telemetry=None):
         self.kernel = kernel
+        # telemetry=obs.Telemetry(...) streams kernel metrics (step size,
+        # accept prob, divergences, ...) off-device at chunk boundaries,
+        # times the executor's phases, and writes JSONL events + a run
+        # manifest — without touching the sample stream (bit-identity with
+        # telemetry on vs. off is tested) and without extra host syncs
+        # beyond the one drain per compiled chunk (docs/observability.md)
+        self.telemetry = telemetry
         # validate=True lints the kernel's model once per fresh setup (a
         # pure Python pre-compile pass; the warm sampling path is untouched)
         self.validate = bool(validate)
@@ -116,6 +132,8 @@ class MCMC:
         self._mesh = None          # lazily built inference mesh
         self.progress = bool(progress)
         self._divergences = 0   # cumulative, reported by progress lines
+        self._reporter = None   # lazily-built default chunk reporter
+        self._metrics_ok = set()  # setups whose metrics_fn passed RPL401/402
         self.collect_fields = collect_fields
         self._samples = None
         self._collected = None
@@ -129,7 +147,7 @@ class MCMC:
         self._exec_cache = {}
 
     # -- compiled chunk programs ----------------------------------------------
-    def _exec(self, kind, setup: KernelSetup, length=None):
+    def _exec(self, kind, setup: KernelSetup, length=None, metrics=False):
         """Compiled chunk program for ``setup``.
 
         Per-chain kernels get the executor's batching (``vmap`` over the
@@ -139,17 +157,34 @@ class MCMC:
         reductions inside the kernel stay visible to XLA (they become
         all-reduces under ``chain_method="parallel"``).  Collected draws come
         out as ``(chains, draws, ...)`` either way.
+
+        ``metrics=True`` additionally threads ``setup.metrics_fn`` through
+        the scan's *outputs* (never the carry — the transition chain is the
+        identical op sequence, which is why the sample stream stays
+        bit-identical): warmup chunks then return ``(state, metrics)``
+        instead of ``state`` and sample chunks ``(state, (collect,
+        metrics))``.  The flag is part of the cache key, so metrics-off
+        programs are byte-for-byte the pre-telemetry ones and flipping
+        telemetry on compiles *new* entries instead of recompiling any
+        existing setup's warm path.
         """
-        key = (kind, setup, length, self.mesh_shape)
+        metrics = bool(metrics) and setup.metrics_fn is not None \
+            and kind != "init"
+        key = (kind, setup, length, self.mesh_shape, metrics)
         fn = self._exec_cache.get(key)
+        tele = self.telemetry
         if fn is not None:
+            if tele is not None:
+                tele.counter("exec_cache_hit")
             return fn
+        if tele is not None:
+            tele.counter("exec_cache_miss")
         if kind == "init":
             if setup.cross_chain:
                 prog = setup.init_fn
             else:
                 prog = lambda keys: chain_vmap(setup.init_fn)(keys)  # noqa: E731
-        elif kind == "warmup":
+        elif kind == "warmup" and not metrics:
             def warm_scan(state):
                 return lax.scan(lambda s, _: (setup.sample_fn(s), None),
                                 state, None, length=length)[0]
@@ -158,7 +193,23 @@ class MCMC:
                 prog = warm_scan
             else:
                 prog = lambda states: chain_vmap(warm_scan)(states)  # noqa: E731
-        elif kind == "sample":
+        elif kind == "warmup":
+            def warm_scan_m(state):
+                def body(s, _):
+                    s = setup.sample_fn(s)
+                    return s, setup.metrics_fn(s)
+
+                return lax.scan(body, state, None, length=length)
+
+            if setup.cross_chain:
+                def whole_warm(state):
+                    state, met = warm_scan_m(state)
+                    return state, _metrics_chain_first(met)
+
+                prog = whole_warm
+            else:
+                prog = lambda states: chain_vmap(warm_scan_m)(states)  # noqa: E731
+        elif kind == "sample" and not metrics:
             def body(s, _):
                 s = setup.sample_fn(s)
                 return s, setup.collect_fn(s)
@@ -177,6 +228,25 @@ class MCMC:
                     return lax.scan(body, state, None, length=length)
 
                 prog = lambda states: chain_vmap(one_sample)(states)  # noqa: E731
+        elif kind == "sample":
+            def body_m(s, _):
+                s = setup.sample_fn(s)
+                return s, (setup.collect_fn(s), setup.metrics_fn(s))
+
+            if setup.cross_chain:
+                def whole_m(state):
+                    state, (out, met) = lax.scan(body_m, state, None,
+                                                 length=length)
+                    out = jax.tree_util.tree_map(
+                        lambda x: jnp.swapaxes(x, 0, 1), out)
+                    return state, (out, _metrics_chain_first(met))
+
+                prog = whole_m
+            else:
+                def one_sample_m(state):
+                    return lax.scan(body_m, state, None, length=length)
+
+                prog = lambda states: chain_vmap(one_sample_m)(states)  # noqa: E731
         else:
             raise ValueError(kind)
         fn = jax.jit(self._with_mesh(setup, prog))
@@ -206,6 +276,14 @@ class MCMC:
 
         return with_mesh
 
+    def _span(self, name, **attrs):
+        """Telemetry phase span, or an inert context when telemetry is off
+        (yields a mutable attr dict either way)."""
+        if self.telemetry is None:
+            import contextlib
+            return contextlib.nullcontext(dict(attrs))
+        return self.telemetry.span(name, **attrs)
+
     # -- setup ---------------------------------------------------------------
     def _get_setup(self, rng_key, init_params, model_args,
                    model_kwargs) -> KernelSetup:
@@ -219,14 +297,30 @@ class MCMC:
             # programs plus the dataset captured by its closures
             self._exec_cache = {k: v for k, v in self._exec_cache.items()
                                 if k[1] is not old_setup}
-        if self.validate:
-            self._validate_model(model_args, model_kwargs)
-        setup = self.kernel.setup(rng_key, self.num_warmup,
-                                  init_params=init_params,
-                                  model_args=model_args,
-                                  model_kwargs=model_kwargs)
+        with self._span("setup", validate=self.validate):
+            if self.validate:
+                self._validate_model(model_args, model_kwargs)
+            setup = self.kernel.setup(rng_key, self.num_warmup,
+                                      init_params=init_params,
+                                      model_args=model_args,
+                                      model_kwargs=model_kwargs)
         self._setup_cache = (bundle, self.num_warmup, setup)
         return setup
+
+    def _check_metrics_contract(self, setup):
+        """Eager pre-compile enforcement of the metrics-stream contract,
+        once per setup: RPL401 (non-scalar/wrong-shape metric leaves would
+        broadcast garbage into the buffered series) and RPL402 (a
+        metrics_fn whose outputs depend on the state's rng key).  Pure
+        tracing — ``jax.eval_shape``/``make_jaxpr`` only, zero FLOPs —
+        and the same codes the lint rules in
+        :mod:`repro.lint_rules.obs_rules` report statically."""
+        if setup.metrics_fn is None or setup in self._metrics_ok:
+            return
+        from repro.lint_rules.obs_rules import verify_metrics_fn
+        verify_metrics_fn(setup,
+                          num_chains=self.num_chains).raise_if_errors()
+        self._metrics_ok.add(setup)
 
     def _validate_model(self, model_args, model_kwargs):
         """Lint the kernel's model before building a fresh setup: errors
@@ -306,7 +400,9 @@ class MCMC:
                       step=end)
         # mesh provenance is diagnostic only: arrays are saved in logical
         # (unsharded) layout, so restore is mesh-agnostic — an elastic
-        # resume onto a different device count/mesh never consults these
+        # resume onto a different device count/mesh never consults these.
+        # "divergences" persists the cumulative counter so a resumed run
+        # continues it instead of resetting to 0 mid-run.
         ckpt.save({"chain_state": states}, os.path.join(directory, "state"),
                   step=done,
                   extra={"num_warmup": self.num_warmup,
@@ -315,10 +411,11 @@ class MCMC:
                          "chain_method": self.chain_method,
                          "mesh_shape": (list(self.mesh_shape)
                                         if self.mesh_shape else None),
-                         "num_devices": len(jax.devices())})
+                         "num_devices": len(jax.devices()),
+                         "divergences": int(self._divergences)})
 
     def _restore_checkpoint(self, directory, setup, keys):
-        """Returns (states, collected_or_None, done) or None if no
+        """Returns (states, collected_or_None, done, extra) or None if no
         checkpoint exists yet."""
         from repro.distributed import checkpoint as ckpt
         state_dir = os.path.join(directory, "state")
@@ -371,7 +468,7 @@ class MCMC:
                 f"checkpoint at {directory} is missing sample chunks "
                 f"covering iterations {expected_start}..{done}")
         collected = _tree_concat(parts) if parts else None
-        return states, collected, done
+        return states, collected, done, extra
 
     # -- the executor ---------------------------------------------------------
     def _advance(self, setup, states, collected, done, *, checkpoint_every,
@@ -379,41 +476,77 @@ class MCMC:
         """Advance a batch of chains from iteration ``done`` to the end in
         compiled chunks, checkpointing after each chunk.  Chunk boundaries
         depend only on (num_warmup, num_samples, checkpoint_every, done),
-        so a resumed run replays the identical op sequence."""
+        so a resumed run replays the identical op sequence.
+
+        Telemetry rides the chunk boundary: metrics stacked by the chunk
+        program come off-device in one drain, spans time each chunk (the
+        first span over a fresh program includes its compile), and the live
+        reporter prints once per chunk.  None of it touches the carry, the
+        collect path, or the checkpoint layout — ``self.telemetry = None``
+        runs the byte-identical pre-telemetry programs.
+        """
         total = self.num_warmup + self.num_samples
         chunk = int(checkpoint_every) if checkpoint_every else total
+        tele = self.telemetry
+        want_metrics = (tele is not None and tele.metrics
+                        and setup.metrics_fn is not None)
+        # the cumulative divergence counter is maintained whenever anything
+        # consumes it: progress lines, telemetry, or the checkpoint extra
+        # (which is how it survives a kill/resume)
+        count_div = (self.progress or tele is not None
+                     or checkpoint_dir is not None)
         while done < total:
-            out = None
+            out = met = None
             if done < self.num_warmup:
+                phase = "warmup"
                 n = min(chunk, self.num_warmup - done)
-                states = self._exec("warmup", setup, n)(states)
             else:
+                phase = "sample"
                 n = min(chunk, total - done)
-                states, out = self._exec("sample", setup, n)(states)
-                collected = out if collected is None else _tree_concat(
-                    [collected, out])
-            done += n
+            miss0 = tele.counters.get("exec_cache_miss", 0) \
+                if tele is not None else 0
+            prog = self._exec(phase, setup, n, metrics=want_metrics)
+            cold = (tele is not None
+                    and tele.counters.get("exec_cache_miss", 0) > miss0)
+            with self._span(f"{phase}_chunk", phase=phase, start=done,
+                            end=done + n, program_cold=cold):
+                if phase == "warmup":
+                    if want_metrics:
+                        states, met = prog(states)
+                    else:
+                        states = prog(states)
+                else:
+                    if want_metrics:
+                        states, (out, met) = prog(states)
+                    else:
+                        states, out = prog(states)
+                    collected = out if collected is None else _tree_concat(
+                        [collected, out])
+                if tele is not None:
+                    # close the span on finished device work, not dispatch
+                    jax.block_until_ready(states)
+            start, done = done, done + n
+            host_met = tele.drain_chunk(phase, start, done, met) \
+                if tele is not None else None
+            delta_div = 0
+            if count_div and out is not None and "diverging" in out:
+                delta_div = int(jnp.sum(out["diverging"]))
+                self._divergences += delta_div
+                if tele is not None:
+                    tele.record_divergences(self._divergences)
             if self.progress:
-                self._progress_line(done, total, out)
+                self._reporter.chunk(
+                    done=done, total=total, phase=phase,
+                    num_chains=self.num_chains,
+                    divergences=self._divergences, delta_div=delta_div,
+                    metrics=host_met if host_met is not None else out)
             if checkpoint_dir is not None:
-                self._save_checkpoint(
-                    checkpoint_dir, states, done, chunk=out,
-                    chunk_range=(done - n, done) if out is not None else None)
+                with self._span("checkpoint_write", step=done):
+                    self._save_checkpoint(
+                        checkpoint_dir, states, done, chunk=out,
+                        chunk_range=((done - n, done)
+                                     if out is not None else None))
         return states, collected
-
-    def _progress_line(self, done, total, out):
-        """Host-side progress report, once per completed compiled chunk.
-
-        Runs after the chunk's device work: the ``int(...)`` on the chunk's
-        divergence count is the only sync, and a checkpointing run pays an
-        equivalent one anyway.  Never touches the sample stream.
-        """
-        if out is not None and "diverging" in out:
-            self._divergences += int(jnp.sum(out["diverging"]))
-        phase = "warmup" if done <= self.num_warmup else "sample"
-        print(f"[MCMC] {done}/{total} iterations ({phase}) | "
-              f"chains: {self.num_chains} | "
-              f"divergences: {self._divergences}", flush=True)
 
     # -- public API ----------------------------------------------------------
     def run(self, rng_key, *model_args, init_params=None,
@@ -422,8 +555,34 @@ class MCMC:
             **model_kwargs):
         if resume and checkpoint_dir is None:
             raise ValueError("resume=True requires checkpoint_dir")
+        tele = self.telemetry
+        if tele is not None and self.chain_method == "sequential":
+            raise ValueError(
+                "telemetry requires a batched chain_method ('vectorized' "
+                "or 'parallel'): sequential runs re-enter the executor per "
+                "chain, so there is no single chunk stream to instrument")
+        if tele is not None:
+            # open the sink/manifest before any span can fire; the
+            # setup-derived fields land via commit_run_config below
+            tele.begin_run(
+                {"algo": type(self.kernel).__name__,
+                 "kernel_setup_hash": "",
+                 "num_warmup": self.num_warmup,
+                 "num_samples": self.num_samples,
+                 "num_chains": self.num_chains,
+                 "chain_method": self.chain_method,
+                 "mesh_shape": (list(self.mesh_shape) if self.mesh_shape
+                                else None),
+                 "thinning": self.thinning},
+                default_dir=checkpoint_dir, resume=resume)
         setup = self._get_setup(rng_key, init_params, model_args,
                                 model_kwargs)
+        if tele is not None:
+            if tele.metrics and setup.metrics_fn is not None:
+                self._check_metrics_contract(setup)
+            tele.commit_run_config(
+                algo=setup.algo,
+                kernel_setup_hash=f"{hash(setup) & ((1 << 64) - 1):016x}")
         if self.chain_method == "parallel" and setup.data_axis is not None:
             # eager shard/mesh fit check — the same condition would raise
             # RPL303 mid-trace, this surfaces it before any compilation
@@ -439,6 +598,13 @@ class MCMC:
                     code="RPL303")
         keys = random.split(rng_key, self.num_chains)
         self._divergences = 0
+        if self.progress:
+            if tele is not None:
+                self._reporter = tele.reporter
+            elif self._reporter is None:
+                from repro.obs.report import LiveReporter
+                self._reporter = LiveReporter()
+            self._reporter.start(self.num_warmup + self.num_samples)
 
         if setup.cross_chain and self.chain_method == "sequential":
             raise ValueError(
@@ -465,22 +631,31 @@ class MCMC:
 
             restored = None
             if resume:
-                restored = self._restore_checkpoint(checkpoint_dir, setup,
-                                                    keys)
+                with self._span("resume_restore"):
+                    restored = self._restore_checkpoint(checkpoint_dir,
+                                                        setup, keys)
             if restored is not None:
-                states, collected, done = restored
-                if (self.progress and collected is not None
-                        and "diverging" in collected):
-                    # keep the cumulative progress counter honest across a
-                    # resume: recount the restored chunks' divergences
+                states, collected, done, ck_extra = restored
+                # continue the cumulative divergence counter across the
+                # resume: the checkpoint extra persists it exactly; a
+                # pre-telemetry checkpoint without the field falls back to
+                # recounting the restored chunks
+                prev_div = ck_extra.get("divergences")
+                if prev_div is not None:
+                    self._divergences = int(prev_div)
+                elif collected is not None and "diverging" in collected:
                     self._divergences = int(jnp.sum(collected["diverging"]))
+                if tele is not None:
+                    tele.set_resumed_at(done)
+                    tele.record_divergences(self._divergences)
                 if self.chain_method == "parallel":
                     states = self._shard_tree(states)
                     if collected is not None:
                         collected = self._shard_tree(collected)
             else:
-                states, collected, done = (
-                    self._exec("init", setup)(keys), None, 0)
+                with self._span("init"):
+                    states = self._exec("init", setup)(keys)
+                    collected, done = None, 0
 
             states, collected = self._advance(
                 setup, states, collected, done,
@@ -494,6 +669,13 @@ class MCMC:
         self._samples = jax.vmap(jax.vmap(setup.constrain_fn))(z)
         if not isinstance(self._samples, dict):
             self._samples = {"z": self._samples}
+        if tele is not None:
+            tele.record_divergences(self._divergences)
+            final = {"done": self.num_warmup + self.num_samples,
+                     "divergences": int(self._divergences)}
+            if tele.metrics and setup.metrics_fn is not None:
+                final["metrics"] = tele.buffer.summary("sample")
+            tele.finish_run(final)
         return self
 
     def get_samples(self, group_by_chain: bool = False):

@@ -347,10 +347,15 @@ def analyze(fn: Callable, *args, const_bytes_limit: int = 1 << 20,
       every dispatch, and a recompile when it changes identity).
     - RPL102: host callbacks on the hot path (``pure_callback``/
       ``io_callback``/``debug_callback`` force a device→host sync per call).
+      Callbacks whose target function is marked with
+      :func:`repro.obs.sanction` are skipped — the telemetry subsystem's
+      chunk-boundary drain is the one sanctioned host transfer (it rides a
+      sync the executor pays anyway for progress/checkpoints).
     - RPL103: precision-losing float conversions inside the program.
 
     Zero FLOPs: the program is traced, never executed.
     """
+    from ..obs import is_sanctioned
     findings = []
     closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
     for c in closed.consts:
@@ -367,6 +372,8 @@ def analyze(fn: Callable, *args, const_bytes_limit: int = 1 << 20,
     for eqn in _iter_eqns(closed.jaxpr):
         name = eqn.primitive.name
         if "callback" in name:
+            if any(is_sanctioned(v) for v in eqn.params.values()):
+                continue
             findings.append(_mk_finding(
                 "RPL102", WARN, None,
                 f"host callback primitive '{name}' inside the program: each "

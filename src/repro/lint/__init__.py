@@ -23,6 +23,7 @@ from ..lint_rules.invariants import (check_parity,
                                      check_registry_completeness,
                                      check_signatures, verify_kernel_setup,
                                      verify_registry)
+from ..lint_rules.obs_rules import verify_metrics_fn
 
 __all__ = [
     "Finding",
@@ -38,5 +39,6 @@ __all__ = [
     "lint_model",
     "rule",
     "verify_kernel_setup",
+    "verify_metrics_fn",
     "verify_registry",
 ]

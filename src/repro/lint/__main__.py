@@ -99,6 +99,10 @@ def _corpus_entries():
     ml = _example("mala_logreg")
     yield ("examples/mala_logreg.py:logistic_regression",
            ml.logistic_regression, (x,), {"y": y})
+
+    tl = _example("telemetry_logreg")
+    yield ("examples/telemetry_logreg.py:logistic_regression",
+           tl.logistic_regression, (x,), {"y": y})
     my2 = random.normal(random.PRNGKey(2), (40,)) + 1.0
     yield ("examples/mala_logreg.py:location_scale",
            ml.location_scale, (), {"y": my2})
@@ -136,10 +140,40 @@ def _run_docs(path: Path) -> bool:
     return True
 
 
+def _metrics_contract_entries():
+    """(label, KernelSetup) for every kernel family declaring a
+    ``metrics_fn`` — corpus mode runs the RPL401/RPL402 checks over them."""
+    import jax.numpy as jnp
+    from jax import random
+
+    from ..core.infer import chees_setup, hmc_setup, mrw_setup
+
+    tl = _example("telemetry_logreg")
+    x = random.normal(random.PRNGKey(0), (50, 3))
+    y = (x @ jnp.ones(3) > 0).astype(jnp.float32)
+    common = dict(model=tl.logistic_regression, model_args=(x,),
+                  model_kwargs={"y": y})
+    key = random.PRNGKey(0)
+    yield ("hmc_setup(NUTS).metrics_fn",
+           hmc_setup(key, 10, algo="NUTS", **common))
+    yield ("hmc_setup(NUTS, cross_chain).metrics_fn",
+           hmc_setup(key, 10, algo="NUTS", cross_chain_adapt=True, **common))
+    yield ("chees_setup.metrics_fn", chees_setup(key, 10, **common))
+    yield ("mrw_setup(MALA).metrics_fn", mrw_setup(key, 10, "MALA", **common))
+
+
 def _corpus() -> int:
+    from . import verify_metrics_fn
+
     ok = True
     for label, model, args, kwargs in _corpus_entries():
         ok &= _lint_one(label, model, args, kwargs)
+    for label, setup in _metrics_contract_entries():
+        result = verify_metrics_fn(setup, num_chains=4)
+        print(f"[{'ok' if result.ok else 'FAIL'}] {label}")
+        for finding in result.findings:
+            print(f"    {finding}")
+        ok &= result.ok
     ok &= _run_docs(ROOT / "docs" / "lint.md")
     return 0 if ok else 1
 

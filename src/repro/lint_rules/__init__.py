@@ -9,7 +9,10 @@ Three rule families, one code vocabulary (shared with the runtime via
   found by inspecting a compiled program's closed jaxpr;
 - ``RPL2xx`` — kernel/handler invariants (:mod:`repro.lint_rules.invariants`),
   checked against the declarative op table in :mod:`repro.kernels.ops` and
-  the :class:`~repro.core.infer.kernel_api.KernelSetup` field contract.
+  the :class:`~repro.core.infer.kernel_api.KernelSetup` field contract;
+- ``RPL4xx`` — observability rules (:mod:`repro.lint_rules.obs_rules`):
+  the ``KernelSetup.metrics_fn`` stream contract (shape discipline, no
+  PRNG dependence) backing ``repro.obs``.
 
 Each :class:`Rule` declares its *runtime twin*: the coded error or warning
 the runtime raises for the same defect.  ``twin="error"``/``"warning"``
@@ -96,6 +99,14 @@ RULES = {r.code: r for r in [
     Rule("RPL204", "KernelSetup field contract violation", ERROR, None,
          "the contract is checked by the registry harness; jit itself "
          "fails later with an unhashability error that carries no code"),
+    # -- RPL4xx: observability/metrics-stream rules ------------------------
+    # (lint side in repro.lint_rules.obs_rules; the runtime twin is the
+    # executor's eager pre-compile check, MCMC._check_metrics_contract)
+    Rule("RPL401", "metrics_fn leaf violates the shape contract (scalar "
+         "per-chain; scalar or (num_chains,) cross-chain)", ERROR, "error"),
+    Rule("RPL402", "metrics_fn output depends on the state's rng key "
+         "(metrics must observe the chain, never consume randomness)",
+         ERROR, "error"),
 ]}
 
 

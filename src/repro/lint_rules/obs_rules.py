@@ -1,0 +1,113 @@
+"""RPL4xx — the metrics-stream contract behind ``repro.obs``.
+
+Two rules over a :class:`~repro.core.infer.kernel_api.KernelSetup` that
+declares ``metrics_fn``, both pure tracing (``jax.eval_shape`` /
+``make_jaxpr``, zero FLOPs), both with the executor's eager pre-compile
+check (``MCMC._check_metrics_contract``) as their runtime twin:
+
+- **RPL401** — shape contract: per-chain kernels must return scalar leaves
+  (the executor's ``vmap`` supplies the chain axis, the chunk scan the draw
+  axis); cross-chain kernels scalars (pooled) or ``(num_chains,)`` vectors.
+  Anything else would silently broadcast through the stacked scan outputs
+  and corrupt the buffered series.
+- **RPL402** — PRNG independence: a ``metrics_fn`` whose outputs depend on
+  the state's rng key is either consuming randomness (which, to be visible
+  in the stream, would have to perturb the draw sequence — breaking the
+  bit-identity invariant the whole design rests on) or leaking raw key
+  material into a metrics file.  Detected by forward taint propagation
+  over the metrics jaxpr from the state leaves whose path names an rng
+  key; nested jaxprs (scan/cond bodies) are treated as opaque taint
+  carriers, which is conservative in exactly the safe direction.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ERROR
+
+
+def _mk(code, site, message):
+    from ..core.lint import Finding
+    return Finding(code, ERROR, site, message)
+
+
+def _result(findings):
+    from ..core.lint import LintResult
+    return LintResult(findings)
+
+
+def _key_str(p):
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _path_name(path):
+    return "/".join(_key_str(p) for p in path)
+
+
+def _is_var(v):
+    # jaxpr atoms are Vars or Literals; Literals carry .val and can never
+    # be taint sources
+    return not hasattr(v, "val")
+
+
+def rng_dependent_metrics(setup, num_chains: int = 2):
+    """Names of metric leaves whose value depends on any state leaf whose
+    path mentions an rng key.  Empty list = independent (or no
+    metrics_fn)."""
+    if setup.metrics_fn is None:
+        return []
+    from ..obs.metrics import abstract_state
+    state = abstract_state(setup, num_chains)
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    tainted_ix = {i for i, (path, _) in enumerate(flat)
+                  if any("rng" in _key_str(p).lower() for p in path)}
+    closed, out_shape = jax.make_jaxpr(setup.metrics_fn,
+                                       return_shape=True)(state)
+    jaxpr = closed.jaxpr
+    tainted = {v for i, v in enumerate(jaxpr.invars) if i in tainted_ix}
+    for eqn in jaxpr.eqns:
+        if any(_is_var(v) and v in tainted for v in eqn.invars):
+            tainted.update(eqn.outvars)
+    names = [_path_name(path) for path, _ in
+             jax.tree_util.tree_flatten_with_path(out_shape)[0]]
+    return [names[i] for i, v in enumerate(jaxpr.outvars)
+            if _is_var(v) and v in tainted]
+
+
+def verify_metrics_fn(setup, num_chains: int = 2):
+    """RPL401 + RPL402 over one setup's ``metrics_fn`` (clean result when
+    the setup declares none)."""
+    findings = []
+    if setup.metrics_fn is None:
+        return _result(findings)
+    from ..obs.metrics import metrics_struct, validate_metrics_struct
+    struct = metrics_struct(setup, num_chains)
+    contract = ("scalar leaves (the executor's vmap adds the chain axis)"
+                if not setup.cross_chain else
+                f"scalar (pooled) or ({num_chains},) per-chain leaves")
+    for name, shape in validate_metrics_struct(setup, struct, num_chains):
+        findings.append(_mk(
+            "RPL401", name,
+            f"metrics_fn leaf '{name}' has shape {shape}; the "
+            f"{'cross-chain' if setup.cross_chain else 'per-chain'} "
+            f"metrics contract requires {contract} — other ranks would "
+            "broadcast through the chunk scan's stacked outputs and "
+            "corrupt the buffered series. Reduce the leaf (mean/trace/"
+            "norm) inside metrics_fn."))
+    for name in rng_dependent_metrics(setup, num_chains):
+        findings.append(_mk(
+            "RPL402", name,
+            f"metrics_fn leaf '{name}' depends on the state's rng key: "
+            "metrics must observe the chain, never consume randomness "
+            "(fresh draws inside metrics_fn would have to perturb the "
+            "sample stream to be reflected in it, violating the "
+            "metrics-on/off bit-identity invariant) and must not leak key "
+            "material into telemetry files. Derive the metric from "
+            "non-key state leaves only."))
+    return _result(findings)
+
+
+__all__ = ["rng_dependent_metrics", "verify_metrics_fn"]

@@ -1,0 +1,179 @@
+"""Per-run manifest: the durable record of what a run was.
+
+One ``run_manifest.json`` lives next to the checkpoint dirs (or wherever
+``Telemetry(dir=...)`` points) and accumulates *sessions*: the original
+launch plus every elastic resume appends a session with its own environment
+snapshot (device topology can legitimately change across a resume — that is
+the elastic-restart contract of ``repro.distributed.checkpoint``), chunk
+schedule, span timings, and final diagnostics.  Run-level facts that must
+survive a resume — the cumulative divergence count that
+``MCMC._divergences`` restores, the kernel setup hash, the sampling
+geometry — live at the top level.
+
+Writes are atomic (tmp file + ``os.replace``) and deliberately use plain
+``json``, *not* ``repro.distributed.checkpoint.save``: the manifest is a
+sidecar, and the preemption tests count checkpoint ``save`` calls to define
+kill points — telemetry must not shift them.
+
+Schema: ``manifest_schema.json`` in this package;
+``python -m repro.obs.validate`` checks a written manifest against it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import time
+
+MANIFEST_NAME = "run_manifest.json"
+SCHEMA_VERSION = 1
+
+
+def _git_rev(cwd=None):
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=5)
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else None
+    except Exception:
+        return None
+
+
+def _cpu_model():
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return platform.processor() or platform.machine() or None
+
+
+def collect_environment() -> dict:
+    """Environment snapshot for one session: versions, devices, host.
+
+    Shared by the run manifest and ``benchmarks/run.py`` (the
+    ``bench_summary.json`` environment block), so a number in either
+    artifact can always be traced back to the code and hardware that
+    produced it.
+    """
+    import jax
+    try:
+        import jaxlib
+        jaxlib_version = getattr(jaxlib, "__version__", None)
+    except Exception:
+        jaxlib_version = None
+    devices = jax.devices()
+    return {
+        "git_rev": _git_rev(),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else None,
+        "device_count": len(devices),
+        "process_count": jax.process_count(),
+        "cpu_model": _cpu_model(),
+        "python_version": platform.python_version(),
+        "hostname": platform.node(),
+    }
+
+
+class RunManifest:
+    """The mutable, repeatedly-flushed run record.
+
+    Lifecycle per ``MCMC.run``: :meth:`begin_session` (appends a session —
+    on ``resume=True`` it appends to the *existing* file, preserving
+    earlier sessions), mutate via :meth:`session` /
+    :meth:`add_divergences`, :meth:`finish_session` with final
+    diagnostics.  Every mutator that matters flushes atomically, so a kill
+    at any point leaves a parseable manifest describing everything up to
+    the last completed chunk.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self.data = None  # populated by begin_session
+
+    # -- lifecycle ----------------------------------------------------------
+    def begin_session(self, *, run_config: dict, resume: bool = False,
+                      resumed_at=None) -> dict:
+        existing = self._load() if resume else None
+        if existing is None:
+            self.data = {
+                "schema_version": SCHEMA_VERSION,
+                "created_unix": time.time(),
+                "run": dict(run_config),
+                "divergences": 0,
+                "sessions": [],
+            }
+        else:
+            self.data = existing
+            # geometry may not silently drift across a resume; the
+            # executor validates the checkpoint the same way (hard error),
+            # the manifest just records what it saw
+            self.data["run"] = dict(run_config)
+        session = {
+            "started_unix": time.time(),
+            "resume": bool(resume),
+            "resumed_at_iteration": (int(resumed_at)
+                                     if resumed_at is not None else None),
+            "environment": collect_environment(),
+            "chunk_schedule": [],
+            "spans": [],
+            "counters": {},
+            "final": None,
+        }
+        self.data["sessions"].append(session)
+        self.flush()
+        return session
+
+    def session(self) -> dict:
+        return self.data["sessions"][-1]
+
+    def record_chunk(self, start: int, end: int, phase: str) -> None:
+        self.session()["chunk_schedule"].append(
+            [int(start), int(end), str(phase)])
+
+    def record_span(self, record) -> None:
+        self.session()["spans"].append(record.to_event())
+
+    def set_divergences(self, n: int) -> None:
+        self.data["divergences"] = int(n)
+
+    @property
+    def divergences(self) -> int:
+        return int(self.data["divergences"]) if self.data else 0
+
+    def finish_session(self, *, counters: dict, final: dict) -> None:
+        self.session()["counters"] = {k: int(v) for k, v in counters.items()}
+        self.session()["final"] = final
+        self.flush()
+
+    # -- persistence --------------------------------------------------------
+    def _load(self):
+        if not os.path.exists(self.path):
+            return None
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+        return data if isinstance(data, dict) and "sessions" in data else None
+
+    @classmethod
+    def peek(cls, path: str):
+        """Read-only load (the executor's divergence-restore path)."""
+        m = cls(path)
+        m.data = m._load()
+        return m if m.data is not None else None
+
+    def flush(self) -> None:
+        from .sinks import _jsonable
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(_jsonable(self.data), f, indent=1)
+        os.replace(tmp, self.path)

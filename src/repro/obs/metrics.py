@@ -1,0 +1,125 @@
+"""The metrics stream contract, host side.
+
+A kernel that declares ``KernelSetup.metrics_fn`` promises a pure function
+``state -> dict[str, scalar]`` (per-chain contract) or, for
+``cross_chain=True`` kernels, ``ensemble_state -> dict`` whose leaves are
+scalars (pooled quantities — shared step size, trajectory length) or
+``(num_chains,)`` vectors (per-chain quantities — accept prob, divergence).
+The executor folds ``metrics_fn`` into the chunked ``lax.scan``'s *collect*
+path — the scan outputs, never the carry — so the sample stream is
+bit-identical with metrics on or off, and the whole chunk's time series
+comes off-device in one transfer at the chunk boundary (the same host sync
+a progress line or checkpoint write already pays).
+
+This module owns the two host-side halves of that contract:
+
+- :func:`metrics_struct` / :func:`validate_metrics_struct` — abstract-trace
+  the metrics_fn (zero FLOPs) and check the shape contract; violations are
+  RPL401 (the lint rule in :mod:`repro.lint_rules.obs_rules` and the
+  executor's eager pre-compile check raise the same code).
+- :class:`MetricsBuffer` — accumulates the per-chunk metric trees the
+  executor drains and concatenates them into per-phase ``(chains, draws)``
+  series (pooled cross-chain leaves stay ``(draws,)``).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def abstract_state(setup, num_chains: int = 2):
+    """Abstract (shape/dtype-only) chain state for ``setup``, exactly as
+    ``metrics_fn`` will see it: one chain's state for per-chain kernels,
+    the full ``(num_chains,)`` ensemble state for cross-chain kernels.
+    Pure ``jax.eval_shape`` over ``init_fn`` — zero FLOPs."""
+    if setup.cross_chain:
+        keys = jax.ShapeDtypeStruct((int(num_chains), 2), np.uint32)
+        return jax.eval_shape(setup.init_fn, keys)
+    return jax.eval_shape(setup.init_fn,
+                          jax.ShapeDtypeStruct((2,), np.uint32))
+
+
+def metrics_struct(setup, num_chains: int = 2):
+    """Abstract shape/dtype tree of ``setup.metrics_fn``'s output — zero
+    FLOPs, no compilation.  None when the setup declares no metrics_fn."""
+    if setup.metrics_fn is None:
+        return None
+    return jax.eval_shape(setup.metrics_fn, abstract_state(setup,
+                                                           num_chains))
+
+
+def validate_metrics_struct(setup, struct, num_chains: int = 2):
+    """Shape-contract violations of a metrics output struct, as
+    ``(metric_name, shape)`` pairs (empty list = clean).
+
+    Per-chain kernels: every leaf must be a scalar — the executor's
+    ``vmap`` supplies the chain axis and the scan supplies the draw axis;
+    any other rank would silently broadcast garbage into the series.
+    Cross-chain kernels: scalars (pooled) or ``(num_chains,)`` vectors
+    (per-chain); higher ranks are rejected for the same reason.
+    """
+    if struct is None:
+        return []
+    bad = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+        name = "/".join(_key_str(p) for p in path)
+        ndim = getattr(leaf, "ndim", None)
+        shape = tuple(getattr(leaf, "shape", ()))
+        if setup.cross_chain:
+            ok = ndim == 0 or (ndim == 1 and shape[0] == int(num_chains))
+        else:
+            ok = ndim == 0
+        if not ok:
+            bad.append((name, shape))
+    return bad
+
+
+def _key_str(p):
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+class MetricsBuffer:
+    """Host-side accumulator for per-chunk metric trees.
+
+    ``add_chunk`` transfers one chunk's stacked metrics off-device
+    (``jax.device_get`` — the single sync per compiled chunk the design
+    budgets for) and appends it under its phase.  ``series`` concatenates
+    the chunks along the draw axis: per-chain metric leaves come out as
+    ``(chains, draws)``, pooled cross-chain leaves as ``(draws,)``.
+    """
+
+    def __init__(self):
+        self._chunks = {"warmup": [], "sample": []}
+
+    def add_chunk(self, phase: str, start: int, end: int, tree) -> dict:
+        host = jax.device_get(tree)
+        host = {k: np.asarray(v) for k, v in host.items()}
+        self._chunks[phase].append((int(start), int(end), host))
+        return host
+
+    def series(self, phase: str = "sample") -> dict:
+        """Concatenated per-metric arrays for ``phase`` (draw axis last)."""
+        parts = [tree for _, _, tree in self._chunks[phase]]
+        if not parts:
+            return {}
+        return {k: np.concatenate([p[k] for p in parts], axis=-1)
+                for k in parts[0]}
+
+    def num_draws(self, phase: str = "sample") -> int:
+        return sum(end - start for start, end, _ in self._chunks[phase])
+
+    def summary(self, phase: str = "sample") -> dict:
+        """Scalar per-metric summary (mean over everything + final draw's
+        chain mean) — what the manifest records as final diagnostics."""
+        out = {}
+        for name, arr in self.series(phase).items():
+            arr = np.asarray(arr, np.float64)
+            out[name] = {"mean": float(arr.mean()),
+                         "last": float(arr[..., -1].mean())}
+        return out
+
+    def clear(self) -> None:
+        self._chunks = {"warmup": [], "sample": []}

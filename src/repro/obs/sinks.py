@@ -1,0 +1,85 @@
+"""Event sinks: where telemetry events go once they leave the executor.
+
+An *event* is one flat JSON-serializable dict with at least ``kind`` and
+``t_unix`` (stamped here, not by callers).  Sinks are deliberately dumb —
+the executor drains metrics/spans at chunk boundaries (host side, between
+compiled programs), so a sink never sees device arrays and never runs
+inside a traced function.  ``python -m repro.obs.validate`` checks emitted
+files against the checked-in schemas in this package.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _jsonable(v):
+    """Coerce numpy/jax scalars to plain Python so ``json.dump`` works;
+    small arrays become lists, anything else its ``repr``."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    item = getattr(v, "item", None)
+    if item is not None and getattr(v, "ndim", None) == 0:
+        return item()
+    tolist = getattr(v, "tolist", None)
+    if tolist is not None and getattr(v, "size", 1 << 20) <= 4096:
+        return tolist()
+    return repr(v)
+
+
+class NullSink:
+    """Discards everything (telemetry disabled, or metrics-only use)."""
+
+    def emit(self, event: dict) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class MemorySink:
+    """Buffers events in ``self.events`` — the test/notebook sink."""
+
+    def __init__(self):
+        self.events = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """Appends one JSON object per line to ``path``.
+
+    Append-only and line-framed so an elastic resume (or a concurrent
+    reader) never has to rewrite history: a new session just keeps
+    appending to the same file, and a half-written trailing line from a
+    preemption is detectable (it won't parse) without corrupting the rest.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        self._fh = open(self.path, "a", buffering=1)
+
+    def emit(self, event: dict) -> None:
+        self._fh.write(json.dumps(_jsonable(event)) + "\n")
+
+    def close(self) -> None:
+        if not self._fh.closed:
+            self._fh.close()
+
+
+def stamp(kind: str, payload: dict) -> dict:
+    """Build one event dict: ``kind`` + wall-clock stamp + payload."""
+    event = {"kind": str(kind), "t_unix": time.time()}
+    for k, v in payload.items():
+        event[k] = _jsonable(v)
+    return event

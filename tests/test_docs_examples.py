@@ -15,7 +15,7 @@ pytestmark = pytest.mark.docs  # CI runs these in the dedicated docs-smoke job
 REPO = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "docs/handlers.md", "docs/enumeration.md",
         "docs/ensemble.md", "docs/lint.md", "docs/kernels.md",
-        "docs/distributed.md"]
+        "docs/distributed.md", "docs/observability.md"]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
