@@ -123,7 +123,8 @@ def main():
          "data-axis size (8 virtual devices, chains x data mesh)",
          sharded_potential.main),
         ("obs_overhead", "Telemetry overhead — logreg quick warm wall, "
-         "metrics on vs off (budget < 3%)", obs_overhead.main),
+         "metrics off vs on vs convergence-gated (budget < 3%)",
+         obs_overhead.main),
         ("lint", "Static analyzer — lint_ms on logreg (cost of "
          "validate=True)", lambda quick: _lint_bench()),
     ]
@@ -151,10 +152,10 @@ def main():
         json.dump(out, f, indent=1)
     # per-PR snapshot: bench_summary.json is overwritten every run, the
     # BENCH_<n>.json files accumulate the trajectory
-    with open(os.path.join(RESULTS, "BENCH_9.json"), "w") as f:
+    with open(os.path.join(RESULTS, "BENCH_10.json"), "w") as f:
         json.dump(out, f, indent=1)
     print(f"\nall benchmarks done in {out['total_wall_s']:.0f}s; summary in "
-          f"{RESULTS}/bench_summary.json (snapshot: BENCH_9.json)")
+          f"{RESULTS}/bench_summary.json (snapshot: BENCH_10.json)")
 
 
 if __name__ == "__main__":

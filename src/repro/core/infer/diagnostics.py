@@ -100,10 +100,16 @@ def _discrete_summary(flat):
 def summary(samples_by_chain, prob=0.9):
     """Dict of per-site statistics; values shaped (chains, samples, ...).
 
-    Float sites get the usual moments plus split R-hat and ESS.  Integer or
-    boolean sites (discrete draws, as produced by ``infer_discrete``) instead
+    Float sites get the usual moments, the ``prob``-mass HPDI
+    (``hpdi_lo`` / ``hpdi_hi``), split R-hat and ESS.  Integer or boolean
+    sites (discrete draws, as produced by ``infer_discrete``) instead
     report ``mode`` / ``mode_freq`` / ``n_unique`` (+ ``mean``) — counts of
     states, not chain-mixing statistics.
+
+    ESS/R-hat are computed in one vectorized call over the trailing element
+    axis rather than per-element Python loops; results match the looped path
+    to float64 round-off (batched FFTs and reductions associate differently,
+    so parity is ~1e-12 relative, not bitwise).
     """
     out = {}
     for name, x in samples_by_chain.items():
@@ -113,14 +119,15 @@ def summary(samples_by_chain, prob=0.9):
             stats = _discrete_summary(flat)
             out[name] = {k: v.reshape(x.shape[2:]) for k, v in stats.items()}
             continue
+        lo, hi = hpdi(flat.reshape(-1, flat.shape[-1]), prob=prob, axis=0)
         stats = {
             "mean": flat.mean((0, 1)),
             "std": flat.std((0, 1)),
             "median": np.median(flat, (0, 1)),
-            "n_eff": np.stack([effective_sample_size(flat[..., i])
-                               for i in range(flat.shape[-1])]),
-            "r_hat": np.stack([gelman_rubin(flat[..., i])
-                               for i in range(flat.shape[-1])]),
+            "hpdi_lo": np.atleast_1d(lo),
+            "hpdi_hi": np.atleast_1d(hi),
+            "n_eff": np.atleast_1d(effective_sample_size(flat)),
+            "r_hat": np.atleast_1d(gelman_rubin(flat)),
         }
         out[name] = {k: v.reshape(x.shape[2:]) for k, v in stats.items()}
     return out
@@ -128,8 +135,9 @@ def summary(samples_by_chain, prob=0.9):
 
 def print_summary(samples_by_chain, prob=0.9):
     stats = summary(samples_by_chain, prob)
+    lo_lab, hi_lab = f"{prob * 100:g}%<", f"{prob * 100:g}%>"
     header = f"{'site':>20} {'mean':>10} {'std':>10} {'median':>10} " \
-             f"{'n_eff':>10} {'r_hat':>8}"
+             f"{lo_lab:>10} {hi_lab:>10} {'n_eff':>10} {'r_hat':>8}"
     print(header)
     for name, s in stats.items():
         if "mode" in s:  # discrete (integer-dtype) site
@@ -144,10 +152,13 @@ def print_summary(samples_by_chain, prob=0.9):
         mean = np.atleast_1d(s["mean"]).ravel()
         std = np.atleast_1d(s["std"]).ravel()
         med = np.atleast_1d(s["median"]).ravel()
+        lo = np.atleast_1d(s["hpdi_lo"]).ravel()
+        hi = np.atleast_1d(s["hpdi_hi"]).ravel()
         ne = np.atleast_1d(s["n_eff"]).ravel()
         rh = np.atleast_1d(s["r_hat"]).ravel()
         for i in range(mean.size):
             label = name if mean.size == 1 else f"{name}[{i}]"
             print(f"{label:>20} {mean[i]:>10.4f} {std[i]:>10.4f} "
-                  f"{med[i]:>10.4f} {ne[i]:>10.1f} {rh[i]:>8.3f}")
+                  f"{med[i]:>10.4f} {lo[i]:>10.4f} {hi[i]:>10.4f} "
+                  f"{ne[i]:>10.1f} {rh[i]:>8.3f}")
     return stats

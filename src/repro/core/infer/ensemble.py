@@ -377,6 +377,9 @@ def _collect_fn(state: ChEESState):
     return {
         "z": state.z,
         "potential_energy": state.potential_energy,
+        # per-chain Hamiltonian at the accepted proposal: what divergence
+        # forensics records per divergent transition (repro.obs.divergences)
+        "energy": state.energy,
         "num_steps": jnp.broadcast_to(state.num_steps, (num_chains,)),
         "accept_prob": state.accept_prob,
         "diverging": state.diverging,

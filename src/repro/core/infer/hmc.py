@@ -252,10 +252,15 @@ def _make_sample_fn(potential_fn, num_warmup, schedule, *, algo,
 
 
 def _collect_fn(state: HMCState):
-    """Per-draw outputs the executor records during the sampling phase."""
+    """Per-draw outputs the executor records during the sampling phase.
+    ``energy`` (the Hamiltonian at the accepted proposal) rides along so
+    divergence forensics can record the blow-up magnitude per divergent
+    transition without re-evaluating anything (``repro.obs.divergences``).
+    """
     return {
         "z": state.z,
         "potential_energy": state.potential_energy,
+        "energy": state.energy,
         "num_steps": state.num_steps,
         "accept_prob": state.accept_prob,
         "diverging": state.diverging,

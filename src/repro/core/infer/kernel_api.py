@@ -62,7 +62,12 @@ class KernelSetup(NamedTuple):
 
     init_fn: Callable          # rng_key -> state              (pure)
     sample_fn: Callable        # state -> state                (pure)
-    collect_fn: Callable       # state -> dict of per-draw outputs (pure)
+    # collect_fn: state -> dict of per-draw outputs (pure).  Kernels that
+    # can diverge should emit "diverging" plus the record fields divergence
+    # forensics snapshots per divergent transition — "z", "step_size", and
+    # "energy" (or "potential_energy" for kernels with no Hamiltonian);
+    # the convergence gate (MCMC.run(until=...)) additionally requires "z".
+    collect_fn: Callable
     potential_fn: Callable     # flat (D,) -> scalar potential energy
     unravel_fn: Callable       # flat (D,) -> latent pytree (unconstrained)
     constrain_fn: Callable     # flat (D,) -> latent pytree (constrained)

@@ -45,6 +45,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax, random
 
 from .diagnostics import print_summary
@@ -132,6 +133,12 @@ class MCMC:
         self._mesh = None          # lazily built inference mesh
         self.progress = bool(progress)
         self._divergences = 0   # cumulative, reported by progress lines
+        # convergence gating (run(..., until=Converged(...))): the monitor
+        # folds drained sample chunks into streaming R-hat/ESS accumulators
+        # and the chunk loop stops when the thresholds hold — see
+        # repro.obs.monitor and docs/observability.md
+        self.monitor = None     # per-run ConvergenceMonitor (or None)
+        self._until = None
         self._reporter = None   # lazily-built default chunk reporter
         self._metrics_ok = set()  # setups whose metrics_fn passed RPL401/402
         self.collect_fields = collect_fields
@@ -402,17 +409,23 @@ class MCMC:
         # (unsharded) layout, so restore is mesh-agnostic — an elastic
         # resume onto a different device count/mesh never consults these.
         # "divergences" persists the cumulative counter so a resumed run
-        # continues it instead of resetting to 0 mid-run.
+        # continues it instead of resetting to 0 mid-run; "monitor" does the
+        # same for the convergence accumulators of a gated run (sufficient
+        # statistics only, a few (chains, dims) rows per completed batch),
+        # so a resumed gated run re-hydrates them and reaches the identical
+        # stopping iteration.
+        extra = {"num_warmup": self.num_warmup,
+                 "num_samples": self.num_samples,
+                 "num_chains": self.num_chains,
+                 "chain_method": self.chain_method,
+                 "mesh_shape": (list(self.mesh_shape)
+                                if self.mesh_shape else None),
+                 "num_devices": len(jax.devices()),
+                 "divergences": int(self._divergences)}
+        if self.monitor is not None:
+            extra["monitor"] = self.monitor.state_dict()
         ckpt.save({"chain_state": states}, os.path.join(directory, "state"),
-                  step=done,
-                  extra={"num_warmup": self.num_warmup,
-                         "num_samples": self.num_samples,
-                         "num_chains": self.num_chains,
-                         "chain_method": self.chain_method,
-                         "mesh_shape": (list(self.mesh_shape)
-                                        if self.mesh_shape else None),
-                         "num_devices": len(jax.devices()),
-                         "divergences": int(self._divergences)})
+                  step=done, extra=extra)
 
     def _restore_checkpoint(self, directory, setup, keys):
         """Returns (states, collected_or_None, done, extra) or None if no
@@ -485,17 +498,33 @@ class MCMC:
         collect path, or the checkpoint layout — ``self.telemetry = None``
         runs the byte-identical pre-telemetry programs.
         """
-        total = self.num_warmup + self.num_samples
-        chunk = int(checkpoint_every) if checkpoint_every else total
+        total = self.num_warmup + self._target_samples()
+        # a convergence-gated run needs chunk boundaries to check at; an
+        # explicit checkpoint_every wins (resume boundaries stay a pure
+        # function of the geometry), else the gate cadence sets the chunk
+        if checkpoint_every:
+            chunk = int(checkpoint_every)
+        elif self.monitor is not None:
+            chunk = int(self.monitor.until.check_every)
+        else:
+            chunk = total
         tele = self.telemetry
         want_metrics = (tele is not None and tele.metrics
                         and setup.metrics_fn is not None)
+        forens = getattr(tele, "forensics", None)
         # the cumulative divergence counter is maintained whenever anything
         # consumes it: progress lines, telemetry, or the checkpoint extra
         # (which is how it survives a kill/resume)
         count_div = (self.progress or tele is not None
                      or checkpoint_dir is not None)
         while done < total:
+            # a resumed gated run whose previous session already reached its
+            # stopping decision (killed between the decisive chunk's state
+            # write and process exit) must not draw past it: the decision is
+            # rehydrated from the checkpoint extra with the accumulators
+            if (self.monitor is not None and self.monitor.decision is not None
+                    and self.monitor.decision.get("reason") == "converged"):
+                break
             out = met = None
             if done < self.num_warmup:
                 phase = "warmup"
@@ -530,31 +559,86 @@ class MCMC:
                 if tele is not None else None
             delta_div = 0
             if count_div and out is not None and "diverging" in out:
-                delta_div = int(jnp.sum(out["diverging"]))
+                if forens is not None:
+                    # the mask fetch is the same chunk-boundary sync the
+                    # plain counter pays; full positions are gathered only
+                    # for divergent draws (see obs/divergences.py)
+                    mask = jax.device_get(out["diverging"])
+                    delta_div = int(np.sum(mask))
+                    if delta_div:
+                        forens.fold(start, out, mask, phase=phase)
+                else:
+                    delta_div = int(jnp.sum(out["diverging"]))
                 self._divergences += delta_div
                 if tele is not None:
                     tele.record_divergences(self._divergences)
+            # convergence gate: fold the drained chunk's positions into the
+            # streaming accumulators and stop between chunks once the
+            # thresholds hold.  Reads only the chunk's collect outputs —
+            # never the carry — so the draws taken are bit-identical with
+            # monitoring on or off; the one host fetch rides the chunk
+            # boundary the drain/progress/checkpoint already sync on.
+            stop = False
+            if self.monitor is not None and out is not None:
+                self.monitor.fold(jax.device_get(out["z"]))
+                stop = self.monitor.check(done - self.num_warmup)
             if self.progress:
                 self._reporter.chunk(
                     done=done, total=total, phase=phase,
                     num_chains=self.num_chains,
                     divergences=self._divergences, delta_div=delta_div,
-                    metrics=host_met if host_met is not None else out)
+                    metrics=host_met if host_met is not None else out,
+                    convergence=(self.monitor.history[-1]
+                                 if self.monitor is not None
+                                 and self.monitor.history else None))
             if checkpoint_dir is not None:
                 with self._span("checkpoint_write", step=done):
                     self._save_checkpoint(
                         checkpoint_dir, states, done, chunk=out,
                         chunk_range=((done - n, done)
                                      if out is not None else None))
+            if stop:
+                break
         return states, collected
+
+    def _target_samples(self) -> int:
+        """Post-warmup draw budget: ``until.max_samples`` when a gated run
+        sets one (it may exceed ``num_samples`` — slow convergence is
+        allowed to draw longer), else ``num_samples``."""
+        if self._until is not None and self._until.max_samples is not None:
+            return int(self._until.max_samples)
+        return self.num_samples
 
     # -- public API ----------------------------------------------------------
     def run(self, rng_key, *model_args, init_params=None,
             checkpoint_every: Optional[int] = None,
             checkpoint_dir: Optional[str] = None, resume: bool = False,
-            **model_kwargs):
+            until=None, **model_kwargs):
         if resume and checkpoint_dir is None:
             raise ValueError("resume=True requires checkpoint_dir")
+        self._until = until
+        if until is not None:
+            from repro.obs.monitor import Converged, ConvergenceMonitor
+            if not isinstance(until, Converged):
+                raise TypeError(
+                    f"until must be an obs.Converged spec, got "
+                    f"{type(until).__name__}")
+            if self.chain_method == "sequential":
+                raise ValueError(
+                    "convergence gating requires a batched chain_method "
+                    "('vectorized' or 'parallel'): sequential runs finish "
+                    "one chain before the next starts, so cross-chain "
+                    "R-hat cannot be streamed mid-run")
+            # eager RPL403: an unsatisfiable stopping rule silently
+            # degenerates into a fixed-length run that looks gated — reject
+            # it before anything compiles (lint twin:
+            # repro.lint_rules.obs_rules.verify_until)
+            from repro.lint_rules.obs_rules import verify_until
+            verify_until(until, num_samples=self.num_samples,
+                         num_chains=self.num_chains).raise_if_errors()
+            self.monitor = ConvergenceMonitor(until)
+        else:
+            self.monitor = None
         tele = self.telemetry
         if tele is not None and self.chain_method == "sequential":
             raise ValueError(
@@ -573,7 +657,13 @@ class MCMC:
                  "chain_method": self.chain_method,
                  "mesh_shape": (list(self.mesh_shape) if self.mesh_shape
                                 else None),
-                 "thinning": self.thinning},
+                 "thinning": self.thinning,
+                 "until": (None if until is None else
+                           {"max_rhat": until.max_rhat,
+                            "min_ess": until.min_ess,
+                            "max_samples": until.max_samples,
+                            "check_every": until.check_every,
+                            "batch_size": until.batch_size})},
                 default_dir=checkpoint_dir, resume=resume)
         setup = self._get_setup(rng_key, init_params, model_args,
                                 model_kwargs)
@@ -645,6 +735,19 @@ class MCMC:
                     self._divergences = int(prev_div)
                 elif collected is not None and "diverging" in collected:
                     self._divergences = int(jnp.sum(collected["diverging"]))
+                # re-hydrate the convergence accumulators the same way the
+                # divergence counter comes back: from the checkpoint extra
+                # when the killed run was gated, else (a checkpoint from an
+                # ungated run now resumed with until=) by re-folding the
+                # restored draws — both land on the same accumulator state,
+                # because folds depend only on the draw stream, not on how
+                # it was chunked
+                if self.monitor is not None:
+                    mon_state = ck_extra.get("monitor")
+                    if mon_state is not None:
+                        self.monitor.load_state_dict(mon_state)
+                    elif collected is not None:
+                        self.monitor.fold(jax.device_get(collected["z"]))
                 if tele is not None:
                     tele.set_resumed_at(done)
                     tele.record_divergences(self._divergences)
@@ -666,13 +769,24 @@ class MCMC:
         self._collected = collected
         # constrained-space samples keyed by site name
         z = collected["z"]  # (chains, samples, D)
+        drawn = int(z.shape[1])
+        if self.monitor is not None and self.monitor.decision is None:
+            # the gate never fired: the draw budget ran out unconverged
+            self.monitor.exhausted(drawn)
         self._samples = jax.vmap(jax.vmap(setup.constrain_fn))(z)
         if not isinstance(self._samples, dict):
             self._samples = {"z": self._samples}
         if tele is not None:
             tele.record_divergences(self._divergences)
-            final = {"done": self.num_warmup + self.num_samples,
+            forens = getattr(tele, "forensics", None)
+            if forens is not None and forens.total > 0:
+                # localization baseline: one host fetch of the collected
+                # positions, paid only by runs that actually diverged
+                forens.set_baseline(jax.device_get(z))
+            final = {"done": self.num_warmup + drawn,
                      "divergences": int(self._divergences)}
+            if self.monitor is not None:
+                final["convergence"] = self.monitor.decision
             if tele.metrics and setup.metrics_fn is not None:
                 final["metrics"] = tele.buffer.summary("sample")
             tele.finish_run(final)

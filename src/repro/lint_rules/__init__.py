@@ -107,6 +107,9 @@ RULES = {r.code: r for r in [
     Rule("RPL402", "metrics_fn output depends on the state's rng key "
          "(metrics must observe the chain, never consume randomness)",
          ERROR, "error"),
+    Rule("RPL403", "Converged stopping rule unsatisfiable for the run "
+         "geometry (min_ess above the draw budget, max_rhat below 1, or a "
+         "batch size the budget can never fill)", ERROR, "error"),
 ]}
 
 

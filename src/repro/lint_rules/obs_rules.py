@@ -110,4 +110,64 @@ def verify_metrics_fn(setup, num_chains: int = 2):
     return _result(findings)
 
 
-__all__ = ["rng_dependent_metrics", "verify_metrics_fn"]
+def verify_until(until, *, num_samples: int, num_chains: int):
+    """RPL403 — a :class:`~repro.obs.monitor.Converged` stopping rule that
+    can never fire for the run's geometry.
+
+    A gated run that cannot possibly satisfy (or even evaluate) its
+    thresholds silently degenerates into a fixed-length run that *looks*
+    convergence-checked — worse than no gate.  Checked eagerly by
+    ``MCMC.run(..., until=...)`` before anything compiles (the runtime
+    twin), and statically here over the same conditions:
+
+    - ``min_ess`` above the total draw budget ``cap x num_chains`` (ESS
+      estimates are floored like the post-hoc Geyer estimator and only
+      exceed the budget for anticorrelated chains — a threshold above the
+      budget is a config error, not a stretch goal);
+    - ``max_rhat`` below 1 (split R-hat converges to 1 from above);
+    - a draw budget that never completes the two accumulator batches per
+      half-stream that the streaming estimators need (``cap <
+      4 x batch_size``), so every gate check would see NaN;
+    - degenerate knobs: no thresholds at all, ``batch_size < 2``,
+      ``check_every < 1``, ``max_samples < 1``.
+    """
+    findings = []
+
+    def bad(msg):
+        findings.append(_mk("RPL403", None, msg))
+
+    cap = (int(until.max_samples) if until.max_samples is not None
+           else int(num_samples))
+    budget = cap * int(num_chains)
+    if until.max_rhat is None and until.min_ess is None:
+        bad("Converged sets no thresholds (max_rhat=None, min_ess=None): "
+            "the gate would stop after the first checked chunk regardless "
+            "of mixing. Set at least one threshold, or drop until=.")
+    if until.max_samples is not None and until.max_samples < 1:
+        bad(f"max_samples={until.max_samples} leaves no draw budget.")
+    if until.batch_size < 2:
+        bad(f"batch_size={until.batch_size} cannot form a variance "
+            "estimate; use at least 2 (ideally well above the expected "
+            "autocorrelation time).")
+    if until.check_every < 1:
+        bad(f"check_every={until.check_every} must be a positive chunk "
+            "length.")
+    if until.max_rhat is not None and until.max_rhat < 1.0:
+        bad(f"max_rhat={until.max_rhat} is below 1: split R-hat "
+            "approaches 1 from above as chains mix, so the gate can never "
+            "fire. Typical thresholds are 1.01-1.05.")
+    if until.min_ess is not None and cap >= 1 and until.min_ess > budget:
+        bad(f"min_ess={until.min_ess} exceeds the total draw budget "
+            f"max_samples x chains = {cap} x {num_chains} = {budget}: "
+            "effective sample size cannot reach the threshold. Raise "
+            "max_samples/chains or lower min_ess.")
+    if cap >= 1 and until.batch_size >= 2 and cap < 4 * until.batch_size:
+        bad(f"the draw budget ({cap}) never completes the 4 accumulator "
+            f"batches (batch_size={until.batch_size}) the streaming "
+            "split R-hat needs (two per half-stream): every gate check "
+            "would see NaN diagnostics. Lower batch_size or raise the "
+            "budget.")
+    return _result(findings)
+
+
+__all__ = ["rng_dependent_metrics", "verify_metrics_fn", "verify_until"]

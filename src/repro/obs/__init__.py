@@ -28,14 +28,25 @@ Public surface:
   diagnostics) written next to the checkpoint dirs; elastic resumes append
   a new session to the same record.
 - :class:`~repro.obs.report.LiveReporter` — the chunk-boundary progress
-  reporter (divergence deltas, step-size/accept summaries, ETA).
+  reporter (divergence deltas, step-size/accept summaries, streaming
+  R-hat/ESS of a gated run, ETA).
+- :mod:`~repro.obs.monitor` — streaming split R-hat / batch-means ESS
+  accumulators and the :class:`Converged` stopping rule behind
+  ``MCMC.run(..., until=...)`` (convergence-gated runs).
+- :mod:`~repro.obs.divergences` — the divergent-transition ring buffer and
+  ``python -m repro.obs.divergences <run_dir>`` localization CLI.
+- :mod:`~repro.obs.compare` — the cross-run regression gate
+  (``python -m repro.obs.compare <current> <baseline>``), diffing bench
+  summaries and run manifests with per-metric thresholds.
 - :func:`sanction` — marks a host callback as an executor-sanctioned
   chunk-boundary drain so the RPL102 hazard rule does not fire on it.
 
 See ``docs/observability.md`` for the full contract.
 """
+from .divergences import DivergenceRing
 from .manifest import MANIFEST_NAME, RunManifest, collect_environment
 from .metrics import MetricsBuffer, metrics_struct, validate_metrics_struct
+from .monitor import Converged, ConvergenceMonitor, StreamingDiagnostics
 from .report import LiveReporter
 from .sinks import JsonlSink, MemorySink, NullSink
 from .spans import SpanRecord
@@ -90,6 +101,9 @@ def is_sanctioned(fn) -> bool:
 
 
 __all__ = [
+    "Converged",
+    "ConvergenceMonitor",
+    "DivergenceRing",
     "JsonlSink",
     "LiveReporter",
     "MANIFEST_NAME",
@@ -98,6 +112,7 @@ __all__ = [
     "NullSink",
     "RunManifest",
     "SpanRecord",
+    "StreamingDiagnostics",
     "Telemetry",
     "collect_environment",
     "is_sanctioned",

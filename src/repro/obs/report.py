@@ -49,13 +49,14 @@ class LiveReporter:
 
     def chunk(self, *, done: int, total: int, phase: str, num_chains: int,
               divergences: int, delta_div=None, metrics=None,
-              emit: bool = True) -> str:
+              convergence=None, emit: bool = True) -> str:
         now = time.monotonic()
         line = (f"[MCMC] {done}/{total} iterations ({phase}) | "
                 f"chains: {num_chains} | divergences: {divergences}")
         if delta_div:
             line += f" | +{int(delta_div)} div"
         line += self._metrics_fields(metrics)
+        line += self._convergence_fields(convergence)
         # ETA from the most recent chunk's rate: the first chunk of each
         # program is compile-polluted, so a fresher rate beats a run mean
         if self._last_done is not None and done > self._last_done:
@@ -82,4 +83,19 @@ class LiveReporter:
         accept = metrics.get("accept_prob")
         if accept is not None:
             out += f" | accept: {float(np.asarray(accept).mean()):.2f}"
+        return out
+
+    @staticmethod
+    def _convergence_fields(conv) -> str:
+        """Streaming-diagnostics summary from a gated run's latest gate
+        check (a ``ConvergenceMonitor.history`` entry); NaN values — not
+        yet estimable — are simply omitted."""
+        if not conv:
+            return ""
+        out = ""
+        rhat, ess = conv.get("max_rhat"), conv.get("min_ess")
+        if rhat is not None and np.isfinite(rhat):
+            out += f" | rhat: {rhat:.3f}"
+        if ess is not None and np.isfinite(ess):
+            out += f" | ess: {ess:.0f}"
         return out

@@ -31,6 +31,7 @@ import contextlib
 import os
 from typing import Optional
 
+from .divergences import DivergenceRing
 from .manifest import MANIFEST_NAME, RunManifest
 from .metrics import MetricsBuffer
 from .report import LiveReporter
@@ -45,7 +46,8 @@ class Telemetry:
                  sink=None, events: bool = True, manifest: bool = True,
                  reporter: Optional[LiveReporter] = None,
                  profile_dir: Optional[str] = None,
-                 profile_spans=_CHUNK_SPANS):
+                 profile_spans=_CHUNK_SPANS, forensics: bool = True,
+                 forensics_capacity: int = 256):
         self.metrics = bool(metrics)
         self.dir = str(dir) if dir is not None else None
         self._sink_arg = sink
@@ -55,11 +57,20 @@ class Telemetry:
         self.profile_dir = (str(profile_dir) if profile_dir is not None
                             else None)
         self.profile_spans = tuple(profile_spans)
+        # divergence forensics: a bounded ring of divergent-transition
+        # records the executor feeds at the chunk drain (positions fetched
+        # only for divergent draws — a clean run pays nothing), written to
+        # divergences.json at finish_run for `python -m
+        # repro.obs.divergences <run_dir>`
+        self._forensics_enabled = bool(forensics)
+        self._forensics_capacity = int(forensics_capacity)
+        self.forensics: Optional[DivergenceRing] = None
         self.buffer = MetricsBuffer()
         self.sink = sink if sink is not None else NullSink()
         self.manifest: Optional[RunManifest] = None
         self.spans = []
         self.counters = {}
+        self._artifact_dir = None
         self._profiling = False
         self._span_seq = 0
 
@@ -75,10 +86,13 @@ class Telemetry:
         :meth:`commit_run_config` fills in the setup-derived fields and
         emits the ``run_started`` event."""
         base = self.dir if self.dir is not None else default_dir
+        self._artifact_dir = base
         self.buffer.clear()
         self.spans = []
         self.counters = {}
         self._span_seq = 0
+        self.forensics = (DivergenceRing(self._forensics_capacity)
+                          if self._forensics_enabled else None)
         self._run_config = dict(run_config)
         self._resume = bool(resume)
         if self._sink_arg is not None:
@@ -117,6 +131,10 @@ class Telemetry:
         if self.manifest is not None:
             self.manifest.finish_session(counters=dict(self.counters),
                                          final=final)
+        if self.forensics is not None and self._artifact_dir is not None:
+            # plain atomic JSON like the manifest — never checkpoint.save,
+            # so the preemption kill-point indices stay fixed
+            self.forensics.write(self._artifact_dir)
         self.sink.close()
 
     # -- events / counters --------------------------------------------------

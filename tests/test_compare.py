@@ -1,0 +1,248 @@
+"""The cross-run regression gate (``python -m repro.obs.compare``) and the
+divergence-forensics CLI (``python -m repro.obs.divergences``).
+
+The gate's exit-code contract is what CI stands on: 0 = clean, 1 = at
+least one regression (threshold exceeded or a baseline metric missing),
+2 = usage/load error.  Verified here on fabricated artifacts so every
+branch is deterministic, plus the checked-in thresholds file staying in
+sync with the in-code defaults.
+"""
+import json
+import os
+
+import numpy as np
+
+BENCH_BASE = {
+    "logreg": {"ms_per_leapfrog": 1.0, "min_ess": 100.0, "divergences": 0},
+    "hmm": {"ms_per_leapfrog": 2.0},
+    "chees": {"ess_per_sec_ratio_at_max_chains": 4.0},
+    "obs_overhead": {"within_budget": True, "monitor_within_budget": True},
+}
+
+
+def _write(tmp_path, name, data):
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump(data, f)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# exit-code contract
+# ---------------------------------------------------------------------------
+
+def test_exit_0_when_clean(tmp_path, capsys):
+    from repro.obs import compare
+
+    base = _write(tmp_path, "base.json", BENCH_BASE)
+    cur = _write(tmp_path, "cur.json", BENCH_BASE)
+    assert compare.main([cur, base]) == 0
+    assert "OK — no regressions" in capsys.readouterr().out
+
+
+def test_exit_1_on_fabricated_regression(tmp_path, capsys):
+    from repro.obs import compare
+
+    bad = json.loads(json.dumps(BENCH_BASE))
+    bad["logreg"]["ms_per_leapfrog"] = 3.0      # > 2x: rel_increase(1.0)
+    bad["logreg"]["min_ess"] = 10.0             # < 0.4x: rel_decrease(0.6)
+    bad["obs_overhead"]["monitor_within_budget"] = False
+    base = _write(tmp_path, "base.json", BENCH_BASE)
+    cur = _write(tmp_path, "cur.json", bad)
+    report_path = str(tmp_path / "report.json")
+    assert compare.main([cur, base, "--report", report_path]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION — 3 metric(s) failed" in out
+    report = json.load(open(report_path))
+    failed = {r["metric"] for r in report["rows"]
+              if r["status"] == "regression"}
+    assert failed == {"logreg.ms_per_leapfrog", "logreg.min_ess",
+                      "obs_overhead.monitor_within_budget"}
+
+
+def test_exit_2_on_unreadable_and_kind_mismatch(tmp_path):
+    from repro.obs import compare
+
+    base = _write(tmp_path, "base.json", BENCH_BASE)
+    assert compare.main([str(tmp_path / "missing.json"), base]) == 2
+    manifest = _write(tmp_path, "run_manifest.json",
+                      {"sessions": [], "divergences": 0})
+    assert compare.main([manifest, base]) == 2       # kinds differ
+    assert compare.main([base]) == 2                 # usage error
+
+
+def test_missing_metric_is_regression_new_metric_is_not(tmp_path):
+    from repro.obs import compare
+
+    cur = json.loads(json.dumps(BENCH_BASE))
+    del cur["logreg"]["min_ess"]                     # baseline had it: fails
+    cur["skim"] = {"divergences": 0}                 # new: informational
+    code, report = compare.run(_write(tmp_path, "c.json", cur),
+                               _write(tmp_path, "b.json", BENCH_BASE))
+    assert code == 1
+    by_metric = {r["metric"]: r["status"] for r in report["rows"]}
+    assert by_metric["logreg.min_ess"] == "missing"
+    assert by_metric["skim.divergences"] == "new"
+
+
+def test_within_threshold_drift_passes(tmp_path):
+    from repro.obs import compare
+
+    drift = json.loads(json.dumps(BENCH_BASE))
+    drift["logreg"]["ms_per_leapfrog"] = 1.8        # +80% < rel_increase(1.0)
+    drift["logreg"]["min_ess"] = 50.0               # -50% < rel_decrease(0.6)
+    drift["logreg"]["divergences"] = 5              # +5 <= abs_increase(10)
+    code, report = compare.run(_write(tmp_path, "c.json", drift),
+                               _write(tmp_path, "b.json", BENCH_BASE))
+    assert code == 0 and report["ok"]
+
+
+def test_manifest_kind_compares_final_diagnostics(tmp_path):
+    from repro.obs import compare
+
+    def manifest(max_rhat, div):
+        return {"run": {"algo": "NUTS"}, "divergences": div,
+                "sessions": [{"resume": False,
+                              "final": {"divergences": div,
+                                        "convergence": {"max_rhat": max_rhat,
+                                                        "min_ess": 200.0}}}]}
+
+    base = _write(tmp_path, "base_manifest.json", manifest(1.01, 2))
+    good = _write(tmp_path, "good_manifest.json", manifest(1.02, 2))
+    bad = _write(tmp_path, "bad_manifest.json", manifest(1.5, 9))
+    code, _ = compare.run(good, base)
+    assert code == 0
+    code, report = compare.run(bad, base)
+    assert code == 1
+    failed = {r["metric"] for r in report["rows"]
+              if r["status"] == "regression"}
+    assert "final.convergence.max_rhat" in failed
+    assert "divergences" in failed
+
+
+def test_directory_arguments_resolve_artifacts(tmp_path):
+    from repro.obs import compare
+
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    d1.mkdir(), d2.mkdir()
+    _write(d1, "bench_summary.json", BENCH_BASE)
+    _write(d2, "bench_summary.json", BENCH_BASE)
+    assert compare.main([str(d1), str(d2)]) == 0
+
+
+def test_checked_in_thresholds_match_default_rules():
+    """benchmarks/regression_thresholds.json is what CI passes explicitly;
+    it must stay in sync with the in-code defaults."""
+    from repro.obs import compare
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "regression_thresholds.json")
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded["bench"] == compare.DEFAULT_RULES["bench"]
+    assert loaded["manifest"] == compare.DEFAULT_RULES["manifest"]
+
+
+def test_thresholds_file_overrides_defaults(tmp_path):
+    from repro.obs import compare
+
+    worse = json.loads(json.dumps(BENCH_BASE))
+    worse["logreg"]["ms_per_leapfrog"] = 3.0        # fails default (max 1.0)
+    cur = _write(tmp_path, "c.json", worse)
+    base = _write(tmp_path, "b.json", BENCH_BASE)
+    loose = _write(tmp_path, "loose.json", {"bench": [
+        {"metric": "logreg.ms_per_leapfrog", "kind": "rel_increase",
+         "max": 5.0}]})
+    assert compare.main([cur, base]) == 1
+    assert compare.main([cur, base, "--thresholds", loose]) == 0
+
+
+# ---------------------------------------------------------------------------
+# divergence forensics CLI
+# ---------------------------------------------------------------------------
+
+def _funnel_artifact(tmp_path):
+    """A real forensics artifact: divergent positions sit far below the
+    baseline on dim 0 (the funnel-neck signature)."""
+    from repro.obs import DivergenceRing
+
+    rng = np.random.default_rng(0)
+    ring = DivergenceRing(capacity=8)
+    out = {"z": rng.normal(size=(2, 30, 2)),
+           "energy": rng.normal(size=(2, 30)),
+           "step_size": np.full((2, 30), 0.05)}
+    out["z"][:, :, 0] += 1.0                        # baseline mean ~ 1
+    mask = np.zeros((2, 30), bool)
+    mask[0, [3, 17]] = True
+    mask[1, 9] = True
+    out["z"][0, 3, 0] = out["z"][0, 17, 0] = out["z"][1, 9, 0] = -6.0
+    ring.fold(100, out, mask, phase="sample")
+    ring.set_baseline(out["z"])
+    ring.write(str(tmp_path))
+    return ring
+
+
+def test_divergences_cli_localizes(tmp_path, capsys):
+    from repro.obs import divergences
+
+    ring = _funnel_artifact(tmp_path)
+    assert ring.total == 3
+    assert divergences.main([str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "divergences: 3 total" in out
+    assert "divergences concentrate at dim 0" in out
+    assert "below the posterior mean" in out
+
+    # --top and direct-file addressing both work
+    path = os.path.join(str(tmp_path), divergences.ARTIFACT_NAME)
+    assert divergences.main([path, "--top", "1"]) == 0
+
+
+def test_divergences_cli_exit_2_on_unreadable(tmp_path, capsys):
+    from repro.obs import divergences
+
+    assert divergences.main([str(tmp_path / "nope")]) == 2
+    assert divergences.main([]) == 2
+
+
+def test_divergences_ring_capacity_and_total(tmp_path):
+    from repro.obs import DivergenceRing
+
+    rng = np.random.default_rng(1)
+    ring = DivergenceRing(capacity=4)
+    out = {"z": rng.normal(size=(1, 10, 3)),
+           "potential_energy": rng.normal(size=(1, 10))}
+    mask = np.ones((1, 10), bool)
+    assert ring.fold(0, out, mask) == 10
+    assert ring.total == 10 and len(ring.records) == 4
+    assert ring.records[0]["energy_kind"] == "potential_energy"
+    assert ring.records[-1]["iteration"] == 9
+
+
+def test_gated_funnel_run_writes_forensics_artifact(tmp_path):
+    """End to end: a telemetry-attached funnel run records its divergences
+    and the CLI localizes them to the neck (dim of v, unconstrained)."""
+    from jax import random
+
+    import repro.core as pc
+    import jax.numpy as jnp
+    from repro import obs
+    from repro.core import dist
+    from repro.core.infer import MCMC, NUTS
+    from repro.obs import divergences
+
+    def funnel():
+        v = pc.sample("v", dist.Normal(0.0, 3.0))
+        pc.sample("x", dist.Normal(0.0, jnp.exp(0.5 * v)))
+
+    mcmc = MCMC(NUTS(funnel), num_warmup=24, num_samples=36, num_chains=4,
+                progress=False, telemetry=obs.Telemetry(dir=str(tmp_path)))
+    mcmc.run(random.PRNGKey(11))
+    assert mcmc._divergences > 0, "funnel produced no divergences; weak test"
+
+    data = divergences.load(str(tmp_path))
+    assert data["total"] == mcmc._divergences
+    assert data["records"], "no records kept"
+    assert data["baseline"] is not None
+    assert len(data["records"][0]["z"]) == 2         # (v, x) unconstrained
+    assert divergences.main([str(tmp_path)]) == 0

@@ -1,0 +1,464 @@
+"""Convergence-gated runs (docs/observability.md).
+
+Numerics first: the streaming split R-hat must match the post-hoc
+``gelman_rubin`` to float64 round-off whenever the draw count is a whole,
+even number of accumulator batches (the halves then contain exactly the
+post-hoc estimator's draws), batch-means ESS must land on the AR(1)
+closed-form tau, and the accumulator state must be bitwise independent of
+how the draw stream was chunked (that independence is what makes a resumed
+gated run land on the identical stopping iteration).  Then the executor
+contract: ``until=Converged(...)`` must not change a bit of the sample
+stream, the RPL403 geometry lint fires eagerly, the stopping decision rides
+the manifest and the checkpoint extra, and kill/resume reaches the same
+decision at the same iteration.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+MCMC_WARMUP, MCMC_SAMPLES, MCMC_EVERY = 24, 36, 20
+
+
+def _ar1(rng, rho, c, n):
+    x = np.empty((c, n))
+    innov = rng.normal(size=(c, n)) * np.sqrt(1.0 - rho**2)
+    x[:, 0] = rng.normal(size=c)
+    for t in range(1, n):
+        x[:, t] = rho * x[:, t - 1] + innov[:, t]
+    return x
+
+
+def _logreg():
+    import jax.numpy as jnp
+    from jax import random
+
+    import repro.core as pc
+    from repro.core import dist
+
+    x = random.normal(random.PRNGKey(0), (80, 3))
+    y = (x @ jnp.ones(3) > 0).astype(jnp.float32)
+
+    def model(x, y=None):
+        m = pc.sample("m", dist.Normal(0.0, jnp.ones(3)).to_event(1))
+        b = pc.sample("b", dist.Normal(0.0, 1.0))
+        return pc.sample("y", dist.Bernoulli(logits=x @ m + b), obs=y)
+
+    return model, (x,), {"y": y}
+
+
+def _funnel_mcmc(kernel_cls, num_samples=MCMC_SAMPLES, **kw):
+    import jax.numpy as jnp
+
+    import repro.core as pc
+    from repro.core import dist
+    from repro.core.infer import MCMC
+
+    def funnel():
+        v = pc.sample("v", dist.Normal(0.0, 3.0))
+        pc.sample("x", dist.Normal(0.0, jnp.exp(0.5 * v)))
+
+    return MCMC(kernel_cls(funnel), num_warmup=MCMC_WARMUP,
+                num_samples=num_samples, num_chains=4, progress=False, **kw)
+
+
+# jointly unreachable thresholds (RPL403-clean): split R-hat can dip below
+# 1 by chance, so max_rhat alone could fire; requiring ESS at the full
+# nominal budget too keeps a gated run at full length deterministically
+def _unreachable(num_samples, num_chains, **kw):
+    from repro.obs import Converged
+    return Converged(max_rhat=1.0 + 1e-9,
+                     min_ess=float(num_samples * num_chains), **kw)
+
+
+# ---------------------------------------------------------------------------
+# streaming estimators vs. the post-hoc ones
+# ---------------------------------------------------------------------------
+
+def test_streaming_rhat_matches_posthoc_exactly():
+    """Whole, even number of batches -> the split halves are exactly the
+    post-hoc estimator's halves: parity to float64 round-off, for mixed
+    and for deliberately broken chain sets."""
+    from repro.core.infer.diagnostics import gelman_rubin
+    from repro.obs import StreamingDiagnostics
+
+    rng = np.random.default_rng(0)
+    for shift in (0.0, 3.0):
+        x = rng.normal(size=(4, 240, 3))
+        x[0] += shift
+        sd = StreamingDiagnostics(batch_size=20)
+        sd.fold(x)                               # 12 batches, even
+        ref = gelman_rubin(x)
+        np.testing.assert_allclose(sd.split_rhat(), ref,
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_streaming_ess_ar1_golden():
+    """Batch-means ESS vs the AR(1) closed form tau=(1+rho)/(1-rho) and
+    vs the post-hoc Geyer estimate (different estimators, same target)."""
+    from repro.core.infer.diagnostics import effective_sample_size
+    from repro.obs import StreamingDiagnostics
+
+    rng = np.random.default_rng(1)
+    c, n, rho = 4, 8000, 0.7
+    x = _ar1(rng, rho, c, n)[..., None]
+    sd = StreamingDiagnostics(batch_size=100)
+    sd.fold(x)
+    ess = float(sd.ess()[0])
+    expected = c * n / ((1 + rho) / (1 - rho))
+    assert 0.6 * expected < ess < 1.5 * expected, (ess, expected)
+    posthoc = float(effective_sample_size(x[..., 0]))
+    assert abs(ess - posthoc) / posthoc < 0.35, (ess, posthoc)
+
+
+def test_streaming_ess_iid_near_total_draws():
+    from repro.obs import StreamingDiagnostics
+
+    rng = np.random.default_rng(2)
+    c, n = 4, 4000
+    sd = StreamingDiagnostics(batch_size=50)
+    sd.fold(rng.normal(size=(c, n, 2)))
+    ess = sd.ess()
+    assert np.all(0.5 * c * n < ess), ess
+
+
+def test_fold_is_bitwise_chunk_boundary_independent():
+    """The accumulator state is a function of the draw stream only: any
+    segmentation of the same stream — including ones that leave a partial
+    batch pending mid-fold — produces bitwise identical estimates."""
+    from repro.obs import StreamingDiagnostics
+
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 157, 2))             # not a multiple of batch
+    ref = StreamingDiagnostics(batch_size=10)
+    ref.fold(x)
+    for cuts in ([157], [1] * 157, [7, 13, 1, 29, 107], [80, 77],
+                 [9, 9, 9, 130]):
+        sd = StreamingDiagnostics(batch_size=10)
+        start = 0
+        for k in cuts:
+            sd.fold(x[:, start:start + k])
+            start += k
+        assert start == 157
+        np.testing.assert_array_equal(sd.split_rhat(), ref.split_rhat())
+        np.testing.assert_array_equal(sd.ess(), ref.ess())
+        assert sd.num_draws == ref.num_draws
+
+
+def test_state_dict_json_roundtrip_mid_batch_exact():
+    """Checkpoint serialization through actual JSON, with a partial batch
+    pending, then keep folding both copies: bitwise identical."""
+    from repro.obs import StreamingDiagnostics
+
+    rng = np.random.default_rng(4)
+    a, b = rng.normal(size=(4, 47, 3)), rng.normal(size=(4, 53, 3))
+    sd = StreamingDiagnostics(batch_size=10)
+    sd.fold(a)                                   # 7 draws pending
+    clone = StreamingDiagnostics.from_state_dict(
+        json.loads(json.dumps(sd.state_dict())))
+    sd.fold(b)
+    clone.fold(b)
+    np.testing.assert_array_equal(sd.split_rhat(), clone.split_rhat())
+    np.testing.assert_array_equal(sd.ess(), clone.ess())
+
+
+def test_converged_satisfied_nan_never_satisfies():
+    from repro.obs import Converged
+
+    until = Converged(max_rhat=10.0, min_ess=1.0)
+    assert not until.satisfied(float("nan"), 100.0)
+    assert not until.satisfied(1.0, float("nan"))
+    assert until.satisfied(1.0, 100.0)
+    assert not until.satisfied(11.0, 100.0)
+    assert not until.satisfied(1.0, 0.5)
+    # only the configured thresholds are consulted
+    assert Converged(max_rhat=10.0, min_ess=None).satisfied(1.0,
+                                                            float("nan"))
+
+
+def test_monitor_decision_roundtrips_with_state():
+    """The stopping decision itself must survive the checkpoint extra —
+    a kill after the decisive chunk's state write must not let the resumed
+    run draw further."""
+    from repro.obs import ConvergenceMonitor, Converged
+
+    rng = np.random.default_rng(5)
+    mon = ConvergenceMonitor(Converged(max_rhat=50.0, check_every=20,
+                                       batch_size=5))
+    mon.fold(rng.normal(size=(4, 20, 2)))
+    assert mon.check(20) is True
+    assert mon.decision["reason"] == "converged"
+    clone = ConvergenceMonitor(mon.until)
+    clone.load_state_dict(json.loads(json.dumps(mon.state_dict())))
+    assert clone.decision == mon.decision
+    assert clone.history == mon.history
+
+
+# ---------------------------------------------------------------------------
+# RPL403 — unsatisfiable gate geometry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(max_rhat=None, min_ess=None),          # no thresholds at all
+    dict(max_rhat=0.99),                        # below 1: never fires
+    dict(min_ess=10_000.0),                     # above the draw budget
+    dict(batch_size=1),                         # no variance estimate
+    dict(check_every=0),                        # no chunk length
+    dict(max_samples=0),                        # no draw budget
+    dict(batch_size=30),                        # 4 batches never complete
+])
+def test_rpl403_flags_unsatisfiable_geometry(kw):
+    from repro.lint_rules.obs_rules import verify_until
+    from repro.obs import Converged
+
+    result = verify_until(Converged(**kw), num_samples=100, num_chains=4)
+    assert not result.ok
+    assert all(f.code == "RPL403" for f in result.errors)
+
+
+def test_rpl403_clean_on_sane_geometry():
+    from repro.lint_rules.obs_rules import verify_until
+    from repro.obs import Converged
+
+    assert verify_until(Converged(max_rhat=1.01, min_ess=100.0,
+                                  check_every=50, batch_size=10),
+                        num_samples=500, num_chains=4).ok
+
+
+def test_mcmc_run_rejects_rpl403_eagerly():
+    from jax import random
+
+    from repro.core.infer import NUTS
+    from repro.core.lint import ReproValueError
+    from repro.obs import Converged
+
+    mcmc = _funnel_mcmc(NUTS)
+    with pytest.raises(ReproValueError) as ei:
+        mcmc.run(random.PRNGKey(0), until=Converged(max_rhat=0.5))
+    assert ei.value.code == "RPL403"
+    with pytest.raises(TypeError):
+        mcmc.run(random.PRNGKey(0), until={"max_rhat": 1.01})
+
+
+def test_sequential_chain_method_rejects_gating():
+    from jax import random
+
+    from repro.core.infer import NUTS
+    from repro.obs import Converged
+
+    mcmc = _funnel_mcmc(NUTS, chain_method="sequential")
+    with pytest.raises(ValueError, match="sequential"):
+        mcmc.run(random.PRNGKey(0), until=Converged(max_rhat=1.01))
+
+
+# ---------------------------------------------------------------------------
+# executor: bit-identity + stopping behaviour
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["NUTS", "ChEES"])
+def test_gated_run_bit_identical_to_plain(name):
+    """Monitoring on vs off: with jointly unreachable thresholds a gated
+    run draws the full budget, and every draw is bit-identical to the
+    ungated run — per-chain (NUTS) and cross_chain (ChEES) alike, even
+    though gating changes the chunk schedule (check_every)."""
+    from jax import random
+
+    from repro.core.infer import MCMC, NUTS, ChEES
+
+    kernel_cls = {"NUTS": NUTS, "ChEES": ChEES}[name]
+    model, args, kwargs = _logreg()
+
+    plain = MCMC(kernel_cls(model), num_warmup=40, num_samples=40,
+                 num_chains=4, progress=False)
+    plain.run(random.PRNGKey(1), *args, **kwargs)
+    ref = plain.get_samples(group_by_chain=True)
+
+    gated = MCMC(kernel_cls(model), num_warmup=40, num_samples=40,
+                 num_chains=4, progress=False)
+    gated.run(random.PRNGKey(1), *args, **kwargs,
+              until=_unreachable(40, 4, check_every=10, batch_size=5))
+    got = gated.get_samples(group_by_chain=True)
+
+    for site in ref:
+        np.testing.assert_array_equal(
+            np.asarray(got[site]), np.asarray(ref[site]),
+            err_msg=f"{name}: convergence gating changed the sample stream "
+            f"at site {site!r}")
+    assert gated.monitor.decision["reason"] == "max_samples"
+    assert gated.monitor.history, "gate never checked"
+    assert all(not h["converged"] for h in gated.monitor.history)
+
+
+def test_gated_run_stops_within_one_chunk_of_posthoc(tmp_path):
+    """The acceptance bar: a gated funnel run must stop within one chunk of
+    the post-hoc estimators crossing the thresholds.  With rhat the binding
+    threshold and boundaries that are whole even batch counts the streaming
+    value *equals* the post-hoc one, so the stopping boundary must match
+    the post-hoc first crossing exactly; both runs share a key and gating
+    is bit-identical, so the prefix streams agree draw for draw."""
+    from jax import random
+
+    from repro import obs
+    from repro.core.infer import NUTS
+    from repro.core.infer.diagnostics import gelman_rubin
+    from repro.obs import Converged
+    from repro.obs.manifest import RunManifest
+
+    check_every, batch, budget = 20, 5, 120
+    thresh = 1.2
+    ref = _funnel_mcmc(NUTS, num_samples=budget)
+    ref.run(random.PRNGKey(11))
+    samples = ref.get_samples(group_by_chain=True)
+    flat = np.stack([np.asarray(samples["v"], np.float64),
+                     np.asarray(samples["x"], np.float64)], axis=-1)
+
+    crossing = None
+    for t in range(check_every, budget + 1, check_every):
+        if float(np.nanmax(gelman_rubin(flat[:, :t]))) <= thresh:
+            crossing = t
+            break
+
+    gated = _funnel_mcmc(NUTS, num_samples=budget,
+                         telemetry=obs.Telemetry(dir=str(tmp_path)))
+    gated.run(random.PRNGKey(11),
+              until=Converged(max_rhat=thresh, check_every=check_every,
+                              batch_size=batch))
+    decision = gated.monitor.decision
+    drawn = np.asarray(gated.get_samples(group_by_chain=True)["x"]).shape[1]
+
+    if crossing is None:
+        assert decision["reason"] == "max_samples", decision
+        assert drawn == budget
+    else:
+        assert decision["reason"] == "converged", decision
+        assert abs(decision["stopped_at_draws"] - crossing) <= check_every, (
+            decision, crossing)
+        assert drawn == decision["stopped_at_draws"]
+        np.testing.assert_array_equal(
+            np.asarray(gated.get_samples(group_by_chain=True)["x"]),
+            np.asarray(samples["x"])[:, :drawn])
+
+    # the decision is durable: manifest final block carries it
+    man = RunManifest.peek(os.path.join(str(tmp_path),
+                                        obs.MANIFEST_NAME)).data
+    assert man["sessions"][-1]["final"]["convergence"] == decision
+
+
+def _run_killed(mcmc, ckdir, kill_at, until, seed=11):
+    from jax import random
+
+    from repro.distributed import checkpoint as ckpt
+    real_save, calls = ckpt.save, {"n": 0}
+
+    def wrapped_save(tree, directory, **kw):
+        real_save(tree, directory, **kw)
+        calls["n"] += 1
+        if calls["n"] == kill_at:
+            raise KeyboardInterrupt(f"preempted after save #{kill_at}")
+
+    ckpt.save = wrapped_save
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            mcmc.run(random.PRNGKey(seed), checkpoint_every=MCMC_EVERY,
+                     checkpoint_dir=ckdir, until=until)
+    finally:
+        ckpt.save = real_save
+
+
+@pytest.mark.parametrize("kill_at", [2, 3, 4])
+def test_gated_kill_resume_identical_stopping_iteration(tmp_path, kill_at):
+    """Kill a gated checkpointed run at every interesting point — during
+    warmup (#2), after the decisive chunk's samples write (#3), and after
+    its state write (#4, decision already durable) — and resume: the run
+    must land on the identical stopping iteration, decision, and draws."""
+    from jax import random
+
+    from repro.core.infer import NUTS
+    from repro.obs import Converged
+
+    # max_rhat=50 fires at the first gate check (draws=20, 4 full batches)
+    # regardless of mixing, making the stopping iteration deterministic
+    until = Converged(max_rhat=50.0, batch_size=5)
+
+    ref = _funnel_mcmc(NUTS)
+    ref.run(random.PRNGKey(11), checkpoint_every=MCMC_EVERY,
+            checkpoint_dir=str(tmp_path / "ref"), until=until)
+    expected = np.asarray(ref.get_samples(group_by_chain=True)["x"])
+    decision = ref.monitor.decision
+    assert decision["reason"] == "converged"
+    assert decision["stopped_at_draws"] == MCMC_EVERY
+    assert expected.shape[1] == MCMC_EVERY
+
+    ckdir = str(tmp_path / "kill")
+    _run_killed(_funnel_mcmc(NUTS), ckdir, kill_at, until)
+    resumed = _funnel_mcmc(NUTS)
+    resumed.run(random.PRNGKey(11), checkpoint_every=MCMC_EVERY,
+                checkpoint_dir=ckdir, resume=True, until=until)
+    np.testing.assert_array_equal(
+        np.asarray(resumed.get_samples(group_by_chain=True)["x"]), expected)
+    assert resumed.monitor.decision == decision, (
+        f"kill_at={kill_at}: resumed run reached a different decision")
+
+
+# ---------------------------------------------------------------------------
+# 2-D mesh: gated bit-identity under real sharding (subprocess, slow)
+# ---------------------------------------------------------------------------
+
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax import random
+import repro.core as pc
+from repro import obs
+from repro.core import dist
+from repro.core.infer import MCMC, NUTS
+
+n, d = 256, 4
+x = random.normal(random.PRNGKey(0), (n, d))
+y = (random.uniform(random.PRNGKey(1), (n,))
+     < jax.nn.sigmoid(x @ jnp.linspace(-1.0, 1.0, d))).astype(jnp.float32)
+
+def model(x, y):
+    w = pc.sample("w", dist.Normal(jnp.zeros(d), 1.0).to_event(1))
+    pc.sample("y", dist.Bernoulli(logits=x @ w), obs=y,
+              infer={"potential": "glm"})
+
+def run(mesh_shape, until):
+    m = MCMC(NUTS(model, data_shards=2), num_warmup=24, num_samples=24,
+             num_chains=4, chain_method="parallel", mesh_shape=mesh_shape,
+             progress=False)
+    m.run(random.PRNGKey(7), x, y, until=until)
+    reason = m.monitor.decision["reason"] if m.monitor else None
+    return (np.asarray(m.get_samples()["w"], np.float32).tobytes().hex(),
+            reason)
+
+until = obs.Converged(max_rhat=1.0 + 1e-9, min_ess=24.0 * 4,
+                      check_every=8, batch_size=4)
+out = {"n_devices": len(jax.devices())}
+for label, mesh in [("mesh_1d", None), ("mesh_2x2", (2, 2))]:
+    out[label + "_off"], _ = run(mesh, None)
+    out[label + "_on"], out[label + "_reason"] = run(mesh, until)
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_gated_mesh_samples_bit_identical():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["n_devices"] == 4
+    for label in ("mesh_1d", "mesh_2x2"):
+        assert got[label + "_on"] == got[label + "_off"], (
+            f"{label}: convergence gating changed the sample stream")
+        assert got[label + "_reason"] == "max_samples"
